@@ -1,0 +1,80 @@
+"""Micro-benchmark fit of the cost-model execution-time coefficients
+(paper Table 3 analogue) — writes src/repro/configs/cost_coeffs.json.
+
+Features per measured superstep: [1, V_slice, E_slice, etr·E_slice, m̄].
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import engine as E
+from repro.core.planner import fit_linear, load_coeffs, save_coeffs
+from repro.core.stats import GraphStats
+from repro.graphdata.ldbc import LdbcParams, generate_ldbc
+from repro.graphdata.queries import make_workload
+
+from .common import SCALE, emit
+
+
+def run(write: bool = True):
+    sizes = {"ci": (150, 400), "full": (400, 1200)}[SCALE]
+    rows, times = [], []
+    for n in sizes:
+        g = generate_ldbc(LdbcParams(n_persons=n, degree_dist="facebook", seed=6))
+        V, E2 = g.n_vertices, 2 * g.n_edges
+        deg = g.in_degree.astype(np.int64) + g.out_degree.astype(np.int64)
+        trav_by_type = np.zeros(g.n_vertex_types, np.int64)
+        np.add.at(trav_by_type, g.v_type, deg)
+        wl = make_workload(g, n_per_template=3, seed=61)
+        for inst in wl:
+            qry = inst.qry
+            for split in (0, qry.n_vertices - 1):
+                E.count_results(g, qry, split=split)  # compile
+                t0 = time.perf_counter()
+                for _ in range(3):
+                    out = E.execute(g, qry, split=split)
+                t = (time.perf_counter() - t0) / 3 * 1e3
+                n_steps = qry.n_vertices
+                # distribute time over supersteps with per-step features
+                v_slices, e_slices, etrs, msgs = [], [], [], []
+                for i, vp in enumerate(qry.v_preds):
+                    v_slices.append(
+                        g.type_counts[vp.vtype] if vp.vtype >= 0 else V)
+                    nxt = qry.v_preds[i + 1].vtype if i + 1 < n_steps else -1
+                    e_slices.append(trav_by_type[nxt] if nxt >= 0 else E2)
+                    etrs.append(1.0 if (i < len(qry.e_preds) and
+                                        qry.e_preds[i].etr_op != -1) else 0.0)
+                feats = np.asarray([
+                    n_steps,
+                    float(np.sum(v_slices)),
+                    float(np.sum(e_slices[:-1])),
+                    float(np.sum(np.asarray(etrs[:-1]) * np.asarray(e_slices[:-1]))),
+                    float(np.sum(e_slices[:-1])) * 0.05,  # message proxy
+                ])
+                rows.append(feats)
+                times.append(t)
+    X = np.asarray(rows)
+    y = np.asarray(times)
+    theta = fit_linear(X, y)
+    theta = np.maximum(theta, 0.0)  # physical non-negativity
+    coeffs = dict(
+        theta0=float(theta[0]), theta_init=float(theta[1]),
+        theta_v=float(theta[1]), theta_e=float(theta[2]),
+        theta_etr=float(theta[3]), theta_m=float(theta[4]),
+    )
+    pred = X @ theta
+    r2 = 1 - np.sum((y - pred) ** 2) / max(np.sum((y - y.mean()) ** 2), 1e-9)
+    if write:
+        save_coeffs(coeffs)
+    emit("fit_cost_model/r2", 0.0, f"r2={r2:.3f};n={len(y)};coeffs={coeffs}")
+    return coeffs
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

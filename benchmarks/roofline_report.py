@@ -1,0 +1,85 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_reports():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_time(t):
+    if t is None:
+        return "-"
+    return f"{t*1e3:.3f}ms" if t >= 1e-3 else f"{t*1e6:.1f}µs"
+
+
+def run(mesh: str = "single"):
+    recs = load_reports()
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                 f"SKIPPED:{r['reason']}")
+            continue
+        if r.get("status") != "ok":
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0, "ERROR")
+            continue
+        dom = r["bottleneck"]
+        tmax = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        frac = (r["t_compute"] / tmax) if tmax else 0.0
+        uf = r.get("useful_flops_frac")
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}",
+            tmax * 1e6,
+            f"tc={fmt_time(r['t_compute'])};tm={fmt_time(r['t_memory'])};"
+            f"tx={fmt_time(r['t_collective'])};bottleneck={dom};"
+            f"compute_frac={frac*100:.0f}%"
+            + (f";useful_flops={uf*100:.0f}%" if uf else ""),
+        )
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+            "| MODEL/HLO flops | scan_scale |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in load_reports():
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped: {r['reason']} | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        uf = r.get("useful_flops_frac")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_time(r['t_compute'])} | "
+            f"{fmt_time(r['t_memory'])} | {fmt_time(r['t_collective'])} | "
+            f"{r['bottleneck']} | {uf*100:.0f}% |" if uf else
+            f"| {r['arch']} | {r['shape']} | {fmt_time(r['t_compute'])} | "
+            f"{fmt_time(r['t_memory'])} | {fmt_time(r['t_collective'])} | "
+            f"{r['bottleneck']} | — |",
+        )
+        rows[-1] += f" {r.get('scan_scale', 1.0):.0f} |"
+    return "\n".join(rows)
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Fig 14 analogue: weak scaling — graph size ∝ worker count.
+
+The container has one CPU, so wall-clock multi-node scaling cannot be
+measured directly.  We report two honest quantities per (w, graph(w)):
+  * makespan model: per-worker superstep work (typed-partition edge extents
+    from the two-level partitioner) → efficiency = mean_work / max_work —
+    the load-balance component of weak scaling (the paper's Q3/Q4 straggler
+    effect shows up here);
+  * measured single-stream execution time of the workload on graph(w),
+    normalised by w (perfect weak scaling ⇒ flat).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import engine as E
+from repro.graphdata.ldbc import LdbcParams, generate_ldbc
+from repro.graphdata.partitioner import partition_graph
+from repro.graphdata.queries import make_workload
+
+from .common import SCALE, emit
+
+BASE = {"ci": 50, "full": 125}[SCALE]
+
+
+def run():
+    workers = [2, 4, 8, 16]
+    t_ref = None
+    for w in workers:
+        params = LdbcParams(n_persons=BASE * w, degree_dist="facebook", seed=3)
+        g = generate_ldbc(params)
+        p = partition_graph(g, n_workers=w, parts_per_type=max(4, w // 2))
+        # per-worker edge work (messages owned by each worker's partitions)
+        worker_edges = np.zeros(w)
+        owner = p.worker_of_part[p.part_of]
+        np.add.at(worker_edges, owner[g.e_dst], 1.0)
+        balance_eff = worker_edges.mean() / max(worker_edges.max(), 1)
+        wl = make_workload(g, templates=("Q1", "Q2", "Q4"), n_per_template=3,
+                           seed=31)
+        for inst in wl:
+            E.count_results(g, inst.qry)  # warm
+        t0 = time.perf_counter()
+        for inst in wl:
+            E.count_results(g, inst.qry)
+        t = (time.perf_counter() - t0) / len(wl)
+        if t_ref is None:
+            t_ref, e_ref = t, g.n_edges
+        # per-edge throughput relative to the w=2 point (flat = no super-
+        # linear per-edge cost growth); the *distributed* weak-scaling
+        # efficiency is this × the partition load balance (makespan model).
+        tput_eff = min(1.0, (t_ref / t) * (g.n_edges / e_ref))
+        eff = tput_eff * balance_eff
+        emit(f"weak_scaling/w{w}", t * 1e6,
+             f"persons={BASE*w};balance_eff={balance_eff*100:.0f}%;"
+             f"weak_eff={eff*100:.0f}%;edge_cut={p.stats['edge_cut']*100:.1f}%")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""End-to-end driver: generate an LDBC temporal graph, build statistics,
+plan with the cost model, serve the 8-template workload, verify vs oracle.
+
+    PYTHONPATH=src python examples/temporal_queries.py [--persons 1000]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.query import main
+
+if __name__ == "__main__":
+    if "--verify" not in sys.argv:
+        sys.argv.append("--verify")
+    main()

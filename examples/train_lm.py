@@ -1,0 +1,14 @@
+"""Train a reduced MiniCPM (WSD schedule) with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+Interrupt and re-run to see fault-tolerant resume from the last checkpoint.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline / §Perf tables from the
+artifacts in experiments/dryrun and experiments/perf."""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load(d):
+    out = []
+    for f in sorted(glob.glob(os.path.join(ROOT, "experiments", d, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        r["_file"] = os.path.basename(f)
+        out.append(r)
+    return out
+
+
+def ft(t):
+    if t is None:
+        return "—"
+    if t >= 1.0:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t*1e3:.2f}ms"
+    return f"{t*1e6:.1f}µs"
+
+
+def fb(b):
+    if not b:
+        return "—"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}MB"
+    return f"{b/1e3:.0f}kB"
+
+
+ORDER = ["llama3-405b", "minicpm-2b", "gemma3-4b", "olmoe-1b-7b",
+         "mixtral-8x22b", "pna", "egnn", "meshgraphnet", "schnet",
+         "dlrm-rm2", "granite-ldbc"]
+
+
+def dryrun_table(mesh):
+    recs = [r for r in load("dryrun") if r.get("mesh") == mesh]
+    recs.sort(key=lambda r: (ORDER.index(r["arch"]) if r["arch"] in ORDER else 99,
+                             r["shape"]))
+    rows = ["| arch | shape | status | per-dev args | per-dev temp | "
+            "HLO GFLOPs/dev | HLO GB/dev | coll GB/dev | compile s |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped | "
+                        f"{r['reason']} | | | | | |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        m = r.get("memory_per_device") or {}
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {fb(m.get('argument_bytes'))} "
+            f"| {fb(m.get('temp_bytes'))} | {r['hlo_flops']/1e9:.1f} "
+            f"| {r['hlo_bytes']/1e9:.2f} | {r['collective_bytes']/1e9:.2f} "
+            f"| {r.get('t_compile_s', 0):.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh="single"):
+    recs = [r for r in load("dryrun") if r.get("mesh") == mesh]
+    recs.sort(key=lambda r: (ORDER.index(r["arch"]) if r["arch"] in ORDER else 99,
+                             r["shape"]))
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+            "| useful FLOPs (6·N·D / HLO) | scan scale |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"*skipped: {r['reason']}* | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        uf = r.get("useful_flops_frac")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {ft(r['t_compute'])} "
+            f"| {ft(r['t_memory'])} | {ft(r['t_collective'])} "
+            f"| **{r['bottleneck']}** "
+            f"| {'%.0f%%' % (uf*100) if uf else '—'} "
+            f"| {r.get('scan_scale', 1):.1f} |")
+    return "\n".join(rows)
+
+
+def perf_table():
+    recs = load("perf")
+    rows = ["| cell | iteration | t_compute | t_memory | t_collective | "
+            "bottleneck | per-dev temp | per-dev args |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        m = r.get("memory_per_device") or {}
+        cell, it = r["arch"].rsplit("__", 1)
+        rows.append(
+            f"| {cell} | {it} | {ft(r['t_compute'])} | {ft(r['t_memory'])} "
+            f"| {ft(r['t_collective'])} | {r['bottleneck']} "
+            f"| {fb(m.get('temp_bytes'))} | {fb(m.get('argument_bytes'))} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("## single-pod (16×16 = 256 chips)\n")
+        print(dryrun_table("single"))
+        print("\n## multi-pod (2×16×16 = 512 chips)\n")
+        print(dryrun_table("multi"))
+    if which in ("all", "roofline"):
+        print("\n## roofline (single-pod)\n")
+        print(roofline_table())
+    if which in ("all", "perf"):
+        print("\n## perf iterations\n")
+        print(perf_table())

@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: baseline → optimised iterations for the three
+chosen cells, each lowered+compiled on the single-pod mesh and analysed with
+the roofline pipeline.  Results → experiments/perf/<cell>__<iter>.json.
+
+Chosen cells (see EXPERIMENTS.md §Perf for the hypothesis log):
+  1. llama3-405b × decode_32k   — worst serving cell (HBM/ICI blowup)
+  2. mixtral-8x22b × train_4k   — most collective/memory-bound train cell
+  3. granite-ldbc × q3hop_etr   — the paper's own technique
+     (+ warp_2hop, its dynamic-mode variant)
+"""
+import dataclasses
+import json
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common, load_arch
+from repro.configs import granite_ldbc as GL
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import analyze_compiled
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
+
+
+def record(tag, cell, mesh, model_flops=None, scan_trips=None):
+    t0 = time.time()
+    with mesh:
+        fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings)
+        compiled = fn.lower(*cell.args).compile()
+        rep = analyze_compiled(
+            compiled, mesh.devices.size, tag, "", "single",
+            model_flops=model_flops, scan_trips=scan_trips,
+            analytic_flops=getattr(cell, "analytic_flops", None))
+    rec = rep.to_json()
+    rec["t_compile_s"] = time.time() - t0
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=2)
+    m = rec.get("memory_per_device") or {}
+    print(f"[{tag}] tc={rec['t_compute']*1e3:.2f}ms tm={rec['t_memory']*1e3:.2f}ms "
+          f"tx={rec['t_collective']*1e3:.2f}ms bott={rec['bottleneck']} "
+          f"temp={m.get('temp_bytes',0)/1e9:.1f}GB arg={m.get('argument_bytes',0)/1e9:.1f}GB",
+          flush=True)
+    return rec
+
+
+# ---------------------------------------------------------------- LM cells
+def lm_iter(arch_id, shape, itname, mesh, **cfg_overrides):
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{arch_id.replace('-', '_')}")
+    cfg = dataclasses.replace(mod.CONFIG, **cfg_overrides)
+    cell = common.lm_cell(cfg, shape, mesh)
+    spec = load_arch(arch_id)
+    from repro.launch.dryrun import model_flops_for
+    mf = model_flops_for(arch_id, shape, spec)
+    return record(f"{arch_id}__{shape}__{itname}", cell, mesh,
+                  model_flops=mf, scan_trips=cfg.n_layers)
+
+
+# ------------------------------------------------------------ granite cells
+def granite_sliced_cell(shape_name, mesh):
+    """Type-sliced variant of a granite dry-run cell (synthetic slice bounds
+    at 100k:F scale; fractions from paper Table 4 arrival mix)."""
+    from repro.core import engine_sliced as ES
+    from repro.core import query as Q
+
+    V, E2 = GL.V_FULL, 2 * GL.E_FULL
+    # type layout: person, post, comment, forum (fractions of V)
+    fr_v = [0.002, 0.243, 0.736, 0.019]
+    fr_e = [0.20, 0.35, 0.40, 0.05]      # traversal arrivals per type
+    v_bounds, e_bounds = [], []
+    va = ea = 0
+    for i, (fv, fe) in enumerate(zip(fr_v, fr_e)):
+        vb = V if i == 3 else int(va + fv * V)
+        eb = E2 if i == 3 else int(ea + fe * E2)
+        v_bounds.append((va, vb))
+        e_bounds.append((ea, eb))
+        va, ea = vb, eb
+    sb = ES.SliceBounds(tuple(v_bounds), tuple(e_bounds))
+
+    info = GL.SHAPES[shape_name]
+    qry = info["qf"]()
+    split, mode = info["split"], info["mode"]
+    n_buckets = 16
+    gdev_sds = GL._gdev_sds(V, E2, n_buckets)
+    gdev_sh = GL._gdev_shardings(mesh, V, E2)
+    params_sds = common.sds(Q.query_params(qry).shape, jnp.int32)
+    bedges_sds = common.sds((n_buckets + 1,), jnp.int32)
+
+    def run(gdev, params, bedges):
+        out = ES.execute_plan_sliced(gdev, qry, split, mode, n_buckets,
+                                     params, bedges, sb)
+        if info["agg"]:
+            return out.total, out.per_vertex
+        return out.total
+
+    if info["agg"]:
+        # per-vertex output lives on the first-type slice → replicate spec
+        out_sh = (common.named(mesh, P()), common.named(
+            mesh, P(None) if mode == 0 else P(None, None)))
+    else:
+        out_sh = common.named(mesh, P() if mode == 0 else P(None))
+    cell = common.ShapeCell(
+        run, (gdev_sds, params_sds, bedges_sds),
+        (gdev_sh, common.named(mesh, P(None, None)), common.named(mesh, P(None))),
+        out_sh, "query", analytic_flops=GL.analytic_flops(shape_name),
+    )
+    return cell
+
+
+def main():
+    mesh = make_production_mesh(multi_pod=False)
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+
+    if which in ("all", "llama"):
+        print("=== cell 1: llama3-405b decode_32k ===")
+        lm_iter("llama3-405b", "decode_32k", "it0_baseline", mesh)
+        lm_iter("llama3-405b", "decode_32k", "it1_gqa_native", mesh,
+                gqa_native=True)
+
+    if which in ("all", "llama2"):
+        lm_iter("llama3-405b", "decode_32k", "it2_kv_constraint", mesh,
+                gqa_native=True, decode_kv_constraint="dh")
+
+    if which in ("all", "llama3"):
+        lm_iter("llama3-405b", "decode_32k", "it3_kv_quant", mesh,
+                gqa_native=True, kv_cache_quant=True)
+
+    if which in ("all", "mixtral"):
+        print("=== cell 2: mixtral-8x22b train_4k ===")
+        lm_iter("mixtral-8x22b", "train_4k", "it0_baseline", mesh)
+        lm_iter("mixtral-8x22b", "train_4k", "it1_moe_scan", mesh,
+                moe_group_map="scan")
+        lm_iter("mixtral-8x22b", "train_4k", "it2_gqa_native", mesh,
+                moe_group_map="scan", gqa_native=True)
+
+    if which in ("all", "mixtral2"):
+        lm_iter("mixtral-8x22b", "train_4k", "it3_remat_inner", mesh,
+                moe_group_map="scan", gqa_native=True, remat_inner=True)
+
+    if which in ("all", "granite"):
+        print("=== cell 3: granite-ldbc q3hop_etr (+ warp_2hop) ===")
+        spec = load_arch("granite-ldbc")
+        for shape in ("q3hop_etr", "warp_2hop"):
+            cell0 = spec.shapes[shape](mesh)
+            record(f"granite-ldbc__{shape}__it0_baseline", cell0, mesh)
+            cell1 = granite_sliced_cell(shape, mesh)
+            record(f"granite-ldbc__{shape}__it1_sliced", cell1, mesh)
+
+
+if __name__ == "__main__":
+    main()

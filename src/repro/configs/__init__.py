@@ -1,0 +1,21 @@
+"""Architecture configs (assigned pool + the paper's own engine).
+
+Each module exposes ``get_arch() -> common.ArchSpec`` with the exact
+published configuration, per-shape ``input_specs`` (ShapeDtypeStructs — no
+allocation), sharding rules, and a reduced smoke config.
+"""
+ARCH_IDS = (
+    "llama3-405b", "minicpm-2b", "gemma3-4b", "olmoe-1b-7b", "mixtral-8x22b",
+    "pna", "egnn", "meshgraphnet", "schnet",
+    "dlrm-rm2",
+    "granite-ldbc",
+)
+
+
+def load_arch(arch_id: str):
+    import importlib
+
+    mod = importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_')}"
+    )
+    return mod.get_arch()

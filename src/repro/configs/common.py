@@ -1,0 +1,310 @@
+"""Shared dry-run/step machinery for all architectures.
+
+An ArchSpec describes, per input shape:
+  * the step function to lower (train_step for training shapes, decode/
+    prefill/serve for inference shapes),
+  * ShapeDtypeStruct argument trees (never allocated),
+  * in/out shardings on the production mesh,
+plus a smoke() callable that runs a reduced config end-to-end on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models import dlrm as dlrm_mod
+from ..models import gnn as gnn_mod
+from ..models import transformer as tr
+from ..training.optimizer import OptCfg, init_state
+
+
+@dataclasses.dataclass
+class ShapeCell:
+    """One (arch × shape) dry-run cell."""
+    fn: Callable                      # traced step function
+    args: Tuple                       # ShapeDtypeStruct pytrees
+    in_shardings: Tuple
+    out_shardings: Any
+    kind: str                         # 'train' | 'prefill' | 'decode' | 'serve'
+    note: str = ""
+    analytic_flops: Optional[float] = None   # global, for HLO-cost-model fixes
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    arch_id: str
+    family: str
+    shapes: Dict[str, Callable]       # shape name → (mesh) → ShapeCell
+    skip: Dict[str, str]              # shape name → reason
+    smoke: Callable[[], dict]         # reduced-config CPU check
+    meta: Dict[str, Any]
+
+
+def data_axes_of(mesh) -> tuple:
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: named(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ===================================================================== LM
+LM_SHAPES = dict(
+    train_4k=dict(seq=4096, batch=256, kind="train"),
+    prefill_32k=dict(seq=32768, batch=32, kind="prefill"),
+    decode_32k=dict(seq=32768, batch=128, kind="decode"),
+    long_500k=dict(seq=524288, batch=1, kind="decode"),
+)
+
+
+def lm_cfg_for_mesh(cfg: tr.TransformerCfg, mesh) -> tr.TransformerCfg:
+    return dataclasses.replace(cfg, data_axes=data_axes_of(mesh), model_axis="model")
+
+
+def lm_cell(cfg0: tr.TransformerCfg, shape_name: str, mesh,
+            opt_cfg: Optional[OptCfg] = None) -> ShapeCell:
+    info = LM_SHAPES[shape_name]
+    cfg = lm_cfg_for_mesh(cfg0, mesh)
+    dp = cfg.data_axes
+    B, S = info["batch"], info["seq"]
+    pspecs = tr.param_specs(cfg, mesh)
+    params_sds = tr.init_shapes(cfg)
+    params_sh = tree_named(mesh, pspecs)
+
+    if info["kind"] == "train":
+        opt_cfg = opt_cfg or OptCfg()
+        opt_sds = jax.eval_shape(init_state, params_sds)
+        opt_specs = dict(
+            mu=pspecs, nu=pspecs, step=P()
+        )
+        opt_sh = tree_named(mesh, opt_specs)
+        batch_sds = dict(tokens=sds((B, S), jnp.int32), labels=sds((B, S), jnp.int32))
+        bspec = dict(tokens=P(dp, None), labels=P(dp, None))
+        batch_sh = tree_named(mesh, bspec)
+
+        def train_step(params, opt_state, batch):
+            from ..training.optimizer import apply_updates
+            loss, grads = jax.value_and_grad(
+                lambda p: tr.loss_fn(cfg, p, batch))(params)
+            new_p, new_s, metrics = apply_updates(opt_cfg, params, grads, opt_state)
+            return new_p, new_s, dict(loss=loss, **metrics)
+
+        out_sh = (params_sh, opt_sh,
+                  dict(loss=named(mesh, P()), lr=named(mesh, P()),
+                       grad_norm=named(mesh, P())))
+        return ShapeCell(train_step, (params_sds, opt_sds, batch_sds),
+                         (params_sh, opt_sh, batch_sh), out_sh, "train")
+
+    if info["kind"] == "prefill":
+        tokens_sds = sds((B, S), jnp.int32)
+        tok_sh = named(mesh, P(dp, None))
+        cspec = tr.cache_specs(cfg, mesh)
+        cache_sh = (named(mesh, cspec), named(mesh, cspec))
+
+        def prefill_step(params, tokens):
+            return tr.prefill(cfg, params, tokens, max_len=S)
+
+        vocab_ax = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+        out_sh = (named(mesh, P(dp, vocab_ax)), cache_sh)
+        return ShapeCell(prefill_step, (params_sds, tokens_sds),
+                         (params_sh, tok_sh), out_sh, "prefill")
+
+    # decode: one new token against a seq-length cache
+    cshape = (cfg.n_layers, B, cfg.n_kv_heads, S, cfg.d_head)
+    cspec = tr.cache_specs(cfg, mesh) if B > 1 else _cache_spec_b1(cfg, mesh)
+    if cfg.kv_cache_quant:
+        sspec = P(*cspec[:-1])                      # scales drop the Dh dim
+        cache_sds = (sds(cshape, jnp.int8), sds(cshape, jnp.int8),
+                     sds(cshape[:-1], jnp.bfloat16),
+                     sds(cshape[:-1], jnp.bfloat16))
+        cache_sh = (named(mesh, cspec), named(mesh, cspec),
+                    named(mesh, sspec), named(mesh, sspec))
+    else:
+        cache_sds = (sds(cshape, cfg.dtype), sds(cshape, cfg.dtype))
+        cache_sh = (named(mesh, cspec), named(mesh, cspec))
+    tok_sds = sds((B,), jnp.int32)
+    tok_sh = named(mesh, P(dp) if B > 1 else P())
+    len_sds = sds((), jnp.int32)
+
+    def decode(params, cache, tokens, cache_len):
+        return tr.decode_step(cfg, params, cache, tokens, cache_len)
+
+    out_sh = (named(mesh, P(dp, None) if B > 1 else P(None, None)), cache_sh)
+    return ShapeCell(decode, (params_sds, cache_sds, tok_sds, len_sds),
+                     (params_sh, cache_sh, tok_sh, named(mesh, P())),
+                     out_sh, "decode")
+
+
+def _cache_spec_b1(cfg, mesh) -> P:
+    # batch-1 long-context decode: shard the sequence axis of the cache over
+    # the data axes (flash-decode style length parallelism is realised by
+    # XLA's sharded softmax-sum reductions), heads/d_head over model.
+    tp = "model"
+    if cfg.n_kv_heads % mesh.shape[tp] == 0:
+        return P(None, None, tp, data_axes_of(mesh), None)
+    return P(None, None, None, data_axes_of(mesh), tp)
+
+
+# ===================================================================== GNN
+def pad512(n: int) -> int:
+    """Sharded dry-run dims are padded to the 512-device multiple; padding
+    nodes/edges are masked (degree 0 / self-loop) so semantics are exact."""
+    return -(-n // 512) * 512
+
+
+GNN_SHAPES = dict(
+    full_graph_sm=dict(n_nodes=2708, n_edges=10556, d_feat=1433, kind="train"),
+    minibatch_lg=dict(n_nodes=232965, n_edges=114615892, batch_nodes=1024,
+                      fanout=(15, 10), d_feat=602, kind="train_sampled"),
+    ogb_products=dict(n_nodes=2449029, n_edges=61859140, d_feat=100, kind="train"),
+    molecule=dict(n_nodes=30, n_edges=64, batch=128, d_feat=16, kind="train"),
+)
+
+
+def gnn_cell(arch: str, cfg, shape_name: str, mesh) -> ShapeCell:
+    info = GNN_SHAPES[shape_name]
+    dp = data_axes_of(mesh)
+    all_ax = tuple(mesh.axis_names)
+    opt_cfg = OptCfg(lr=1e-3)
+
+    if info["kind"] == "train_sampled":
+        N, E = pad512(info["n_nodes"]), pad512(info["n_edges"])
+        seeds = info["batch_nodes"]
+        f1, f2 = info["fanout"]
+        n1, n2 = seeds * f1, seeds * f1 * f2
+        n_sub = seeds + n1 + n2
+        e_sub = n1 + n2
+        feat_sds = sds((N, info["d_feat"]), jnp.float32)
+        csr_sds = dict(indptr=sds((N + 1,), jnp.int32), indices=sds((E,), jnp.int32))
+        seeds_sds = sds((seeds,), jnp.int32)
+        key_sds = sds((2,), jnp.uint32)
+
+        params = gnn_mod.INIT[arch](cfg, jax.random.PRNGKey(0), info["d_feat"])
+        params_sds = jax.tree_util.tree_map(
+            lambda x: sds(x.shape, x.dtype), params)
+        opt_sds = jax.eval_shape(init_state, params_sds)
+        params_sh = jax.tree_util.tree_map(lambda _: named(mesh, P()), params_sds)
+        opt_sh = jax.tree_util.tree_map(lambda _: named(mesh, P()), opt_sds)
+
+        def step(params, opt_state, feats, csr, seed_ids, key):
+            from ..graphdata.sampler import CSR, sample_union_graph
+            from ..training.optimizer import apply_updates
+            gids, src_l, dst_l = sample_union_graph(
+                CSR(csr["indptr"], csr["indices"]), seed_ids, (f1, f2),
+                jax.random.wrap_key_data(key, impl="threefry2x32"),
+            )
+            gathered = feats[gids]
+            g = gnn_mod.GraphBatch(
+                node_feat=gathered,
+                edge_src=src_l,
+                edge_dst=dst_l,
+                coords=gathered[:, :3],
+                targets=None,
+            )
+            loss, grads = jax.value_and_grad(
+                lambda p: gnn_mod.gnn_loss(arch, cfg, p, g))(params)
+            new_p, new_s, m = apply_updates(opt_cfg, params, grads, opt_state)
+            return new_p, new_s, loss
+
+        in_sh = (params_sh, opt_sh,
+                 named(mesh, P(all_ax, None)),
+                 dict(indptr=named(mesh, P(None)),
+                      indices=named(mesh, P(all_ax))),
+                 named(mesh, P()), named(mesh, P()))
+        out_sh = (params_sh, opt_sh, named(mesh, P()))
+        return ShapeCell(step, (params_sds, opt_sds, feat_sds, csr_sds,
+                                seeds_sds, key_sds),
+                         in_sh, out_sh, "train", note="sampler+train fused")
+
+    # full-batch (or flattened molecule batch)
+    if shape_name == "molecule":
+        N = pad512(info["n_nodes"] * info["batch"])
+        E = pad512(info["n_edges"] * info["batch"])
+        n_graphs = info["batch"]
+    else:
+        N, E = pad512(info["n_nodes"]), pad512(info["n_edges"])
+        n_graphs = 1
+    F = info["d_feat"]
+    params = gnn_mod.INIT[arch](cfg, jax.random.PRNGKey(0), F)
+    params_sds = jax.tree_util.tree_map(lambda x: sds(x.shape, x.dtype), params)
+    opt_sds = jax.eval_shape(init_state, params_sds)
+    params_sh = jax.tree_util.tree_map(lambda _: named(mesh, P()), params_sds)
+    opt_sh = jax.tree_util.tree_map(lambda _: named(mesh, P()), opt_sds)
+    g_sds = dict(
+        node_feat=sds((N, F), jnp.float32),
+        edge_src=sds((E,), jnp.int32),
+        edge_dst=sds((E,), jnp.int32),
+        coords=sds((N, 3), jnp.float32),
+        graph_of=sds((N,), jnp.int32),
+        targets=sds((N, 1), jnp.float32),
+    )
+    g_sh = dict(
+        node_feat=named(mesh, P(all_ax, None)),
+        edge_src=named(mesh, P(all_ax)),
+        edge_dst=named(mesh, P(all_ax)),
+        coords=named(mesh, P(all_ax, None)),
+        graph_of=named(mesh, P(all_ax)),
+        targets=named(mesh, P(all_ax, None)),
+    )
+
+    def step(params, opt_state, gb):
+        from ..training.optimizer import apply_updates
+        g = gnn_mod.GraphBatch(
+            node_feat=gb["node_feat"], edge_src=gb["edge_src"],
+            edge_dst=gb["edge_dst"], coords=gb["coords"],
+            graph_of=gb["graph_of"], n_graphs=n_graphs, targets=gb["targets"],
+        )
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn_mod.gnn_loss(arch, cfg, p, g))(params)
+        new_p, new_s, m = apply_updates(opt_cfg, params, grads, opt_state)
+        return new_p, new_s, loss
+
+    out_sh = (params_sh, opt_sh, named(mesh, P()))
+    return ShapeCell(step, (params_sds, opt_sds, g_sds),
+                     (params_sh, opt_sh, g_sh), out_sh, "train")
+
+
+# ---------------------------------------------------------------- smoke kits
+def lm_smoke(cfg_small: tr.TransformerCfg, moe: bool = False) -> dict:
+    p = tr.init_params(cfg_small, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg_small.vocab)
+    logits = tr.forward(cfg_small, p, toks)
+    loss = tr.loss_fn(cfg_small, p, {"tokens": toks, "labels": toks})
+    cache = tr.init_cache(cfg_small, 2, 32)
+    lg, cache = tr.decode_step(cfg_small, p, cache, toks[:, 0], 1)
+    ok = bool(jnp.isfinite(logits).all() and jnp.isfinite(loss) and
+              jnp.isfinite(lg).all())
+    return dict(ok=ok, loss=float(loss), logits_shape=tuple(logits.shape))
+
+
+def gnn_smoke(arch: str, cfg) -> dict:
+    rng = np.random.default_rng(0)
+    N, E, F = 40, 120, 8
+    g = gnn_mod.GraphBatch(
+        node_feat=jnp.asarray(rng.normal(size=(N, F)), jnp.float32),
+        edge_src=jnp.asarray(rng.integers(0, N, E), jnp.int32),
+        edge_dst=jnp.asarray(rng.integers(0, N, E), jnp.int32),
+        coords=jnp.asarray(rng.normal(size=(N, 3)), jnp.float32),
+        graph_of=jnp.asarray(rng.integers(0, 4, N), jnp.int32), n_graphs=4,
+        targets=jnp.asarray(rng.normal(size=(N, 1)), jnp.float32),
+    )
+    params = gnn_mod.INIT[arch](cfg, jax.random.PRNGKey(0), F)
+    loss = gnn_mod.gnn_loss(arch, cfg, params, g)
+    return dict(ok=bool(jnp.isfinite(loss)), loss=float(loss))

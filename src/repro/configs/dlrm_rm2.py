@@ -1,0 +1,113 @@
+"""DLRM RM2 [arXiv:1906.00091] — 13 dense + 26 sparse features, embed 64,
+bot MLP 13-512-256-64, top MLP 512-512-256-1, dot interaction.
+
+Shapes: train 65536 / serve_p99 512 / serve_bulk 262144 / retrieval 1×1M.
+"""
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models import dlrm as dm
+from ..training.optimizer import OptCfg, init_state
+from . import common
+
+CONFIG = dm.DLRMCfg()
+SMOKE = dataclasses.replace(CONFIG, vocab_sizes=[512] * 26,
+                            data_axes=None, model_axis=None)
+
+SHAPES = dict(
+    train_batch=dict(batch=65536, kind="train"),
+    serve_p99=dict(batch=512, kind="serve"),
+    serve_bulk=dict(batch=262144, kind="serve"),
+    retrieval_cand=dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+)
+
+
+def _cell(shape_name: str, mesh) -> common.ShapeCell:
+    info = SHAPES[shape_name]
+    cfg = dataclasses.replace(CONFIG, data_axes=common.data_axes_of(mesh),
+                              model_axis="model")
+    dp = cfg.data_axes
+    pspecs = dm.param_specs(cfg, mesh)
+    params_sds = jax.eval_shape(lambda k: dm.init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+    params_sh = common.tree_named(mesh, pspecs)
+    B = info["batch"]
+    dense_sds = common.sds((B, cfg.n_dense), jnp.float32)
+    sparse_sds = common.sds((B, cfg.n_sparse, cfg.multi_hot), jnp.int32)
+    bspec = P(dp) if B > 1 else P()
+
+    if info["kind"] == "train":
+        opt_cfg = OptCfg(lr=1e-3, weight_decay=0.0)
+        opt_sds = jax.eval_shape(init_state, params_sds)
+        opt_specs = dict(mu=pspecs, nu=pspecs, step=P())
+        opt_sh = common.tree_named(mesh, opt_specs)
+        label_sds = common.sds((B,), jnp.float32)
+
+        def step(params, opt_state, batch):
+            from ..training.optimizer import apply_updates
+            loss, grads = jax.value_and_grad(
+                lambda p: dm.loss_fn(cfg, p, batch))(params)
+            new_p, new_s, m = apply_updates(opt_cfg, params, grads, opt_state)
+            return new_p, new_s, dict(loss=loss, **m)
+
+        batch_sds = dict(dense=dense_sds, sparse=sparse_sds, label=label_sds)
+        batch_sh = common.tree_named(
+            mesh, dict(dense=P(dp, None), sparse=P(dp, None, None), label=P(dp)))
+        out_sh = (params_sh, opt_sh,
+                  dict(loss=common.named(mesh, P()), lr=common.named(mesh, P()),
+                       grad_norm=common.named(mesh, P())))
+        return common.ShapeCell(step, (params_sds, opt_sds, batch_sds),
+                                (params_sh, opt_sh, batch_sh), out_sh, "train")
+
+    if info["kind"] == "serve":
+        def serve(params, dense, sparse):
+            return dm.serve_score(cfg, params, dense, sparse)
+
+        in_sh = (params_sh, common.named(mesh, P(dp, None)),
+                 common.named(mesh, P(dp, None, None)))
+        return common.ShapeCell(serve, (params_sds, dense_sds, sparse_sds),
+                                in_sh, common.named(mesh, bspec), "serve")
+
+    # retrieval: 1 query vs 1M candidate embeddings (padded to 512 multiple)
+    N = -(-info["n_candidates"] // 512) * 512
+    cand_sds = common.sds((N, cfg.embed_dim), jnp.float32)
+    all_ax = tuple(mesh.axis_names)
+
+    def retrieve(params, dense, sparse, cand):
+        return dm.retrieval_score(cfg, params, dense, sparse, cand, top_k=128)
+
+    in_sh = (params_sh, common.named(mesh, P(None, None)),
+             common.named(mesh, P(None, None, None)),
+             common.named(mesh, P(all_ax, None)))
+    out_sh = (common.named(mesh, P()), common.named(mesh, P()))
+    return common.ShapeCell(retrieve,
+                            (params_sds, common.sds((1, cfg.n_dense), jnp.float32),
+                             common.sds((1, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+                             cand_sds),
+                            in_sh, out_sh, "serve", note="retrieval top-k")
+
+
+def _smoke() -> dict:
+    rng = np.random.default_rng(0)
+    p = dm.init_params(SMOKE, jax.random.PRNGKey(0))
+    B = 16
+    batch = dict(
+        dense=jnp.asarray(rng.normal(size=(B, 13)), jnp.float32),
+        sparse=jnp.asarray(rng.integers(0, 512, (B, 26, 1)), jnp.int32),
+        label=jnp.asarray(rng.integers(0, 2, B), jnp.float32),
+    )
+    loss = dm.loss_fn(SMOKE, p, batch)
+    return dict(ok=bool(jnp.isfinite(loss)), loss=float(loss))
+
+
+def get_arch() -> common.ArchSpec:
+    shapes = {name: partial(_cell, name) for name in SHAPES}
+    return common.ArchSpec(
+        arch_id="dlrm-rm2", family="recsys", shapes=shapes, skip={},
+        smoke=_smoke, meta=dict(params=CONFIG.param_count()),
+    )

@@ -1,0 +1,18 @@
+"""EGNN — E(n)-equivariant GNN [arXiv:2102.09844]. 4 layers, d_hidden 64."""
+from functools import partial
+
+from ..models.gnn import EGNNCfg
+from . import common
+
+CONFIG = EGNNCfg()
+
+
+def get_arch() -> common.ArchSpec:
+    shapes = {
+        name: partial(common.gnn_cell, "egnn", CONFIG, name)
+        for name in common.GNN_SHAPES
+    }
+    return common.ArchSpec(
+        arch_id="egnn", family="gnn-equivariant", shapes=shapes, skip={},
+        smoke=lambda: common.gnn_smoke("egnn", CONFIG), meta={},
+    )

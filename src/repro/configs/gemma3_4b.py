@@ -1,0 +1,38 @@
+"""Gemma-3 4B — 5:1 local:global attention, 262k vocab [hf:google/gemma-3].
+
+34L, d_model 2560, 8 heads (kv=4), d_head 256, d_ff 10240.  Sliding window
+1024 on local layers; every 6th layer is global.  long_500k RUNS (local
+layers are sub-quadratic; decode against the long cache).
+"""
+import dataclasses
+from functools import partial
+
+import jax.numpy as jnp
+
+from ..models import transformer as tr
+from . import common
+
+CONFIG = tr.TransformerCfg(
+    name="gemma3-4b",
+    n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4, d_head=256,
+    d_ff=10240, vocab=262144, rope_theta=1_000_000.0, dtype=jnp.bfloat16,
+    sliding_window=1024, global_every=6,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=6, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=128, vocab=512, dtype=jnp.float32, data_axes=None, model_axis=None,
+    sliding_window=8, global_every=3,
+)
+
+
+def get_arch() -> common.ArchSpec:
+    shapes = {
+        name: partial(common.lm_cell, CONFIG, name)
+        for name in ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+    }
+    return common.ArchSpec(
+        arch_id="gemma3-4b", family="lm-dense-swa", shapes=shapes, skip={},
+        smoke=lambda: common.lm_smoke(SMOKE),
+        meta=dict(params=CONFIG.param_count()),
+    )

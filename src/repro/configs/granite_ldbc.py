@@ -1,0 +1,208 @@
+"""Granite query engine as a first-class dry-run architecture.
+
+Cells lower the *paper's own technique* — distributed temporal path query
+supersteps — at the paper's largest-graph scale (100k:F ≈ 52M vertices,
+218M edges, Table 4) on the production mesh.  Traversal/ETR arrays are
+edge-sharded over every mesh axis; the per-superstep frontier exchange and
+the ETR prefix scans become the collectives the roofline reads.
+"""
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core import engine as E
+from ..core import intervals as iv
+from ..core import query as Q
+from . import common
+
+import os
+
+
+def _pad512(n: int) -> int:
+    """Dry-run arrays are padded to a 512-device multiple (padding vertices/
+    edges carry empty lifespans and never match — exact semantics)."""
+    return -(-n // 512) * 512
+
+
+# 100k:F-S scale (paper Table 4); GRANITE_DRYRUN_SCALE=small for CI traces
+if os.environ.get("GRANITE_DRYRUN_SCALE") == "small":
+    V_FULL, E_FULL = _pad512(100_000), _pad512(400_000)
+else:
+    V_FULL = _pad512(52_000_000)
+    E_FULL = _pad512(218_000_000)
+N_VTYPES = 4
+T_LIFE = 1096
+
+_K_TAG, _K_COUNTRY = 0, 1
+
+
+def _gdev_sds(V: int, E2: int, n_buckets: int):
+    s = common.sds
+    return dict(
+        v_type=s((V,), jnp.int32),
+        v_life=s((V, 2), jnp.int32),
+        t_src=s((E2,), jnp.int32),
+        t_dst=s((E2,), jnp.int32),
+        t_life=s((E2, 2), jnp.int32),
+        t_type=s((E2,), jnp.int32),
+        t_isfwd=s((E2,), jnp.int32),
+        arr_ptr=s((V + 1,), jnp.int32),
+        type_ranges=s((N_VTYPES, 2), jnp.int32),
+        etr_perm_start=s((E2,), jnp.int32),
+        etr_perm_end=s((E2,), jnp.int32),
+        etr_dep_ranks=s((4, E2), jnp.int32),
+        etr_arr_ranks=s((4, E2), jnp.int32),
+        vprops={
+            _K_TAG: (s((V, 1), jnp.int32), s((V, 1, 2), jnp.int32)),
+            _K_COUNTRY: (s((V, 1), jnp.int32), s((V, 1, 2), jnp.int32)),
+        },
+        eprops_t={},
+    )
+
+
+def _gdev_shardings(mesh, V: int, E2: int):
+    a = tuple(mesh.axis_names)
+    n = common.named
+    return dict(
+        v_type=n(mesh, P(a)),
+        v_life=n(mesh, P(a, None)),
+        t_src=n(mesh, P(a)),
+        t_dst=n(mesh, P(a)),
+        t_life=n(mesh, P(a, None)),
+        t_type=n(mesh, P(a)),
+        t_isfwd=n(mesh, P(a)),
+        arr_ptr=n(mesh, P(None)),          # offsets replicated (see DESIGN §5)
+        type_ranges=n(mesh, P(None, None)),
+        etr_perm_start=n(mesh, P(a)),
+        etr_perm_end=n(mesh, P(a)),
+        etr_dep_ranks=n(mesh, P(None, a)),
+        etr_arr_ranks=n(mesh, P(None, a)),
+        vprops={
+            _K_TAG: (n(mesh, P(a, None)), n(mesh, P(a, None, None))),
+            _K_COUNTRY: (n(mesh, P(a, None)), n(mesh, P(a, None, None))),
+        },
+        eprops_t={},
+    )
+
+
+def _query_3hop_etr() -> Q.PathQuery:
+    """Q1-shaped: Post(tag) ← Forum → Post(tag, ETR ≺) ← Person(country)."""
+    return Q.PathQuery(
+        v_preds=(
+            Q.VertexPredicate(1, (Q.prop_clause(_K_TAG, "in", 7),)),
+            Q.VertexPredicate(3, (Q.time_clause("overlaps", (100, T_LIFE)),)),
+            Q.VertexPredicate(1, (Q.prop_clause(_K_TAG, "in", 9),)),
+            Q.VertexPredicate(0, (Q.prop_clause(_K_COUNTRY, "==", 2),)),
+        ),
+        e_preds=(
+            Q.EdgePredicate(4, Q.DIR_IN),
+            Q.EdgePredicate(4, Q.DIR_OUT, etr_op=iv.STARTS_BEFORE),
+            Q.EdgePredicate(3, Q.DIR_IN),
+        ),
+    )
+
+
+def _query_2hop_agg() -> Q.PathQuery:
+    return Q.PathQuery(
+        v_preds=(
+            Q.VertexPredicate(0, (Q.prop_clause(_K_COUNTRY, "==", 2),)),
+            Q.VertexPredicate(0),
+            Q.VertexPredicate(0, (Q.prop_clause(_K_TAG, "in", 5),)),
+        ),
+        e_preds=(
+            Q.EdgePredicate(0, Q.DIR_OUT),
+            Q.EdgePredicate(0, Q.DIR_OUT, etr_op=iv.FULLY_BEFORE),
+        ),
+        agg_op=Q.AGG_COUNT,
+    )
+
+
+SHAPES = dict(
+    q3hop_etr=dict(split=1, mode=E.MODE_STATIC, qf=_query_3hop_etr, agg=False),
+    q3hop_rtl=dict(split=0, mode=E.MODE_STATIC, qf=_query_3hop_etr, agg=False),
+    agg_2hop=dict(split=0, mode=E.MODE_STATIC, qf=_query_2hop_agg, agg=True),
+    warp_2hop=dict(split=0, mode=E.MODE_BUCKET, qf=_query_2hop_agg, agg=True),
+)
+
+
+def analytic_flops(shape_name: str, n_vertices=None, n_edges=None,
+                   n_buckets: int = 16) -> float:
+    """Analytic global FLOP count for a query execution.
+
+    Per hop: predicate eval + weight mask ≈ 60 flops/traversal-edge, delivery
+    segment-sum ≈ 1, ETR hops add 2 log-depth prefix scans (~2·log2(2E)) and
+    4 gathers; bucket mode multiplies edge work by B.  XLA's CPU cost model
+    cannot be used for these cells (cumsum → reduce-window counted
+    quadratically), see EXPERIMENTS.md §Roofline.
+    """
+    V = n_vertices or V_FULL
+    e2 = 2.0 * (n_edges or E_FULL)
+    info = SHAPES[shape_name]
+    n_hops = len(info["qf"]().e_preds)
+    has_etr = any(p.etr_op != -1 for p in info["qf"]().e_preds)
+    per_edge = 60.0
+    if has_etr:
+        per_edge += 2 * np.log2(e2) + 8
+    bucket_mult = n_buckets if info["mode"] == E.MODE_BUCKET else 1
+    return n_hops * e2 * per_edge * bucket_mult + 4.0 * V * n_hops
+
+
+def _cell(shape_name: str, mesh) -> common.ShapeCell:
+    info = SHAPES[shape_name]
+    qry = info["qf"]()
+    split, mode = info["split"], info["mode"]
+    n_buckets = 16
+    V, E2 = V_FULL, 2 * E_FULL
+    gdev_sds = _gdev_sds(V, E2, n_buckets)
+    gdev_sh = _gdev_shardings(mesh, V, E2)
+    params_sds = common.sds(Q.query_params(qry).shape, jnp.int32)
+    bedges_sds = common.sds((n_buckets + 1,), jnp.int32)
+    a = tuple(mesh.axis_names)
+
+    def run(gdev, params, bedges):
+        out = E.execute_plan_traced(gdev, qry, split, mode, n_buckets, params,
+                                    bedges)
+        if info["agg"]:
+            return out.total, out.per_vertex
+        return out.total
+
+    if info["agg"]:
+        pv_spec = P(a) if mode == E.MODE_STATIC else P(a, None)
+        out_sh = (common.named(mesh, P()), common.named(mesh, pv_spec))
+    else:
+        out_sh = common.named(mesh, P() if mode == E.MODE_STATIC else P(None))
+    return common.ShapeCell(
+        run, (gdev_sds, params_sds, bedges_sds),
+        (gdev_sh, common.named(mesh, P(None, None)), common.named(mesh, P(None))),
+        out_sh, "query", note=f"split={split} mode={mode}",
+        analytic_flops=analytic_flops(shape_name),
+    )
+
+
+def _smoke() -> dict:
+    from ..core.ref_engine import RefEngine
+    from ..graphdata.ldbc import LdbcParams, generate_ldbc
+    from ..graphdata.queries import make_workload
+
+    g = generate_ldbc(LdbcParams(n_persons=50, seed=11))
+    wl = make_workload(g, templates=("Q2", "Q4"), n_per_template=1, seed=3)
+    ref = RefEngine(g)
+    ok = True
+    for inst in wl:
+        want = ref.count(inst.qry, mode=E.MODE_STATIC)
+        got = E.count_results(g, inst.qry, mode=E.MODE_STATIC)
+        ok &= got == want
+    return dict(ok=bool(ok))
+
+
+def get_arch() -> common.ArchSpec:
+    shapes = {name: partial(_cell, name) for name in SHAPES}
+    return common.ArchSpec(
+        arch_id="granite-ldbc", family="graph-query", shapes=shapes, skip={},
+        smoke=_smoke,
+        meta=dict(V=V_FULL, E=E_FULL, note="paper 100k:F scale"),
+    )

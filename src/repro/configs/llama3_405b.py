@@ -1,0 +1,37 @@
+"""Llama-3 405B — dense GQA transformer [arXiv:2407.21783].
+
+126L, d_model 16384, 128 heads (GQA kv=8), d_ff 53248, vocab 128256.
+Pure full attention → long_500k skipped (DESIGN.md §4).
+"""
+import dataclasses
+from functools import partial
+
+import jax.numpy as jnp
+
+from ..models import transformer as tr
+from ..training.optimizer import OptCfg
+from . import common
+
+CONFIG = tr.TransformerCfg(
+    name="llama3-405b",
+    n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8, d_head=128,
+    d_ff=53248, vocab=128256, rope_theta=500000.0, dtype=jnp.bfloat16,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_head=8,
+    d_ff=160, vocab=512, dtype=jnp.float32, data_axes=None, model_axis=None,
+)
+
+
+def get_arch() -> common.ArchSpec:
+    shapes = {
+        name: partial(common.lm_cell, CONFIG, name)
+        for name in ("train_4k", "prefill_32k", "decode_32k")
+    }
+    return common.ArchSpec(
+        arch_id="llama3-405b", family="lm-dense", shapes=shapes,
+        skip={"long_500k": "pure full attention (assignment rule)"},
+        smoke=lambda: common.lm_smoke(SMOKE),
+        meta=dict(params=CONFIG.param_count(), opt=OptCfg(schedule="cosine")),
+    )

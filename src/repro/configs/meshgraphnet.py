@@ -1,0 +1,18 @@
+"""MeshGraphNet [arXiv:2010.03409]. 15 layers, d_hidden 128, sum agg, 2-layer MLPs."""
+from functools import partial
+
+from ..models.gnn import MGNCfg
+from . import common
+
+CONFIG = MGNCfg()
+
+
+def get_arch() -> common.ArchSpec:
+    shapes = {
+        name: partial(common.gnn_cell, "meshgraphnet", CONFIG, name)
+        for name in common.GNN_SHAPES
+    }
+    return common.ArchSpec(
+        arch_id="meshgraphnet", family="gnn-mpnn", shapes=shapes, skip={},
+        smoke=lambda: common.gnn_smoke("meshgraphnet", CONFIG), meta={},
+    )

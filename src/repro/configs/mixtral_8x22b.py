@@ -1,0 +1,39 @@
+"""Mixtral-8x22B — 8-expert top-2 MoE with sliding-window attn [arXiv:2401.04088].
+
+56L, d_model 6144, 48 heads (GQA kv=8), per-expert d_ff 16384, vocab 32768.
+SWA → long_500k RUNS (rolling-window attention is sub-quadratic).
+"""
+import dataclasses
+from functools import partial
+
+import jax.numpy as jnp
+
+from ..models import transformer as tr
+from . import common
+
+CONFIG = tr.TransformerCfg(
+    name="mixtral-8x22b",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, d_head=128,
+    d_ff=16384, vocab=32768, rope_theta=1_000_000.0, dtype=jnp.bfloat16,
+    moe=tr.MoECfg(n_experts=8, top_k=2, d_ff=16384),
+    sliding_window=4096,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_head=8,
+    d_ff=96, vocab=512, dtype=jnp.float32, data_axes=None, model_axis=None,
+    moe=tr.MoECfg(n_experts=4, top_k=2, d_ff=96), sliding_window=8,
+)
+
+
+def get_arch() -> common.ArchSpec:
+    shapes = {
+        name: partial(common.lm_cell, CONFIG, name)
+        for name in ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+    }
+    return common.ArchSpec(
+        arch_id="mixtral-8x22b", family="lm-moe-swa", shapes=shapes, skip={},
+        smoke=lambda: common.lm_smoke(SMOKE),
+        meta=dict(params=CONFIG.param_count(),
+                  active_params=CONFIG.active_param_count()),
+    )

@@ -1,0 +1,38 @@
+"""OLMoE-1B-7B — 64-expert top-8 MoE [arXiv:2409.02060; hf].
+
+16L, d_model 2048, 16 heads (kv=16), per-expert d_ff 1024, vocab 50304.
+"""
+import dataclasses
+from functools import partial
+
+import jax.numpy as jnp
+
+from ..models import transformer as tr
+from . import common
+
+CONFIG = tr.TransformerCfg(
+    name="olmoe-1b-7b",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, d_head=128,
+    d_ff=1024, vocab=50304, rope_theta=10000.0, dtype=jnp.bfloat16,
+    moe=tr.MoECfg(n_experts=64, top_k=8, d_ff=1024),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+    d_ff=64, vocab=512, dtype=jnp.float32, data_axes=None, model_axis=None,
+    moe=tr.MoECfg(n_experts=8, top_k=2, d_ff=64),
+)
+
+
+def get_arch() -> common.ArchSpec:
+    shapes = {
+        name: partial(common.lm_cell, CONFIG, name)
+        for name in ("train_4k", "prefill_32k", "decode_32k")
+    }
+    return common.ArchSpec(
+        arch_id="olmoe-1b-7b", family="lm-moe", shapes=shapes,
+        skip={"long_500k": "pure full attention (assignment rule)"},
+        smoke=lambda: common.lm_smoke(SMOKE),
+        meta=dict(params=CONFIG.param_count(),
+                  active_params=CONFIG.active_param_count()),
+    )

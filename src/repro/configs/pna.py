@@ -1,0 +1,21 @@
+"""PNA — Principal Neighbourhood Aggregation [arXiv:2004.05718].
+
+4 layers, d_hidden 75, aggregators mean/max/min/std, scalers id/amp/atten.
+"""
+from functools import partial
+
+from ..models.gnn import PNACfg
+from . import common
+
+CONFIG = PNACfg()
+
+
+def get_arch() -> common.ArchSpec:
+    shapes = {
+        name: partial(common.gnn_cell, "pna", CONFIG, name)
+        for name in common.GNN_SHAPES
+    }
+    return common.ArchSpec(
+        arch_id="pna", family="gnn-spmm", shapes=shapes, skip={},
+        smoke=lambda: common.gnn_smoke("pna", CONFIG), meta={},
+    )

@@ -1,0 +1,18 @@
+"""SchNet [arXiv:1706.08566]. 3 interactions, d_hidden 64, 300 RBF, cutoff 10."""
+from functools import partial
+
+from ..models.gnn import SchNetCfg
+from . import common
+
+CONFIG = SchNetCfg()
+
+
+def get_arch() -> common.ArchSpec:
+    shapes = {
+        name: partial(common.gnn_cell, "schnet", CONFIG, name)
+        for name in common.GNN_SHAPES
+    }
+    return common.ArchSpec(
+        arch_id="schnet", family="gnn-molecular", shapes=shapes, skip={},
+        smoke=lambda: common.gnn_smoke("schnet", CONFIG), meta={},
+    )

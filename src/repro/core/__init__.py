@@ -1,0 +1,16 @@
+"""Granite-JAX core: the paper's primary contribution.
+
+Temporal property graph model, temporal path query model (ETR + temporal
+aggregation), the distributed superstep execution engine, split-point query
+plans, graph statistics and the cost-model planner.
+"""
+from . import intervals, query
+from .engine import MODE_BUCKET, MODE_INTERVAL, MODE_STATIC, count_results, execute
+from .graph import PropColumn, TemporalGraph
+from .ref_engine import RefEngine
+
+__all__ = [
+    "intervals", "query", "TemporalGraph", "PropColumn",
+    "execute", "count_results", "RefEngine",
+    "MODE_STATIC", "MODE_BUCKET", "MODE_INTERVAL",
+]

@@ -1,0 +1,221 @@
+"""Cost-model query planner (Sec. 5 of the paper).
+
+Two pieces:
+
+1. **Cardinality recurrences** (Eq. 1–4): per superstep, estimate active and
+   matched vertex/edge counts from the graph statistics (`stats.GraphStats`),
+   with the paper's ⊗ aggregation of clause frequencies (Eq. 5–6: min for
+   AND, max for OR, degree-weighted averages).
+
+2. **Execution-time model**: the paper fits per-phase linear models
+   (I, C, S, CC, IC) from micro-benchmarks.  Granite-JAX supersteps are dense
+   tensor programs whose cost is driven by the *type-sliced* vertex/edge
+   extents plus the estimated message volume (the distributed exchange term),
+   so our linear model is
+
+     T_i = θ0 + θ_v·|V_σi| + θ_e·|Ē_slice(σ_{i+1})| + θ_etr·[etr]·|Ē_slice|
+           + θ_m·m̄_i
+
+   fitted by least squares over micro-benchmarks (benchmarks/fit_cost_model),
+   stored as JSON, reusable across graphs/queries on the same host — exactly
+   the paper's methodology with phase extents adapted to the dense engine.
+
+What matters (paper Sec. 5): not absolute accuracy but *discriminating good
+plans from bad*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import query as Q
+from .stats import GraphStats, HEntry
+
+DEFAULT_COEFFS = {
+    # fallback, overwritten by benchmarks/fit_cost_model.py on the host
+    "theta0": 0.2,        # ms per superstep (dispatch/barrier)
+    "theta_v": 2.0e-5,    # ms per vertex in the typed slice
+    "theta_e": 6.0e-5,    # ms per traversal edge in the hop slice
+    "theta_etr": 8.0e-5,  # extra ms per edge on ETR hops (sort-prefix path)
+    "theta_m": 2.0e-5,    # ms per estimated delivered message (exchange term)
+    "theta_init": 2.0e-5, # ms per vertex evaluated at init
+}
+
+_COEFF_PATH = os.path.join(os.path.dirname(__file__), "..", "configs", "cost_coeffs.json")
+
+
+def load_coeffs(path: Optional[str] = None) -> dict:
+    p = path or _COEFF_PATH
+    if os.path.exists(p):
+        with open(p) as f:
+            return {**DEFAULT_COEFFS, **json.load(f)}
+    return dict(DEFAULT_COEFFS)
+
+
+def save_coeffs(coeffs: dict, path: Optional[str] = None) -> None:
+    p = path or _COEFF_PATH
+    os.makedirs(os.path.dirname(p), exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(coeffs, f, indent=2)
+
+
+# ---------------------------------------------------------------- estimates
+@dataclasses.dataclass
+class StepEstimate:
+    a_v: float       # active vertices (Eq. 1)
+    f_v: float       # histogram frequency for the vertex predicate
+    m_v: float       # matched vertices (Eq. 2)
+    a_e: float       # active edges (Eq. 3)
+    f_e: float       # edge-predicate frequency
+    m_e: float       # matched edges / messages (Eq. 4)
+    t_ms: float      # estimated superstep time
+    v_slice: float   # typed vertex extent processed
+    e_slice: float   # typed traversal-edge extent processed
+    etr: bool
+
+
+@dataclasses.dataclass
+class PlanEstimate:
+    split: int
+    t_ms: float
+    steps: List[StepEstimate]
+
+
+def _clause_freq(stats: GraphStats, clauses: Sequence[Q.Clause], ent_type: int,
+                 is_edge: bool) -> Tuple[float, float, float]:
+    """⊗-aggregate clause frequencies (Eq. 5–6).  Returns (f, δin, δout)."""
+    tot = stats.etype_count(ent_type) if is_edge else stats.type_count(ent_type)
+    acc: Optional[HEntry] = None
+    acc_conj_f = None
+    for c in clauses:
+        if c.kind == Q.K_PROP:
+            h = stats.h_lookup(c.key, c.value, None, is_edge=is_edge)
+            if c.cmp == Q.P_NEQ:
+                h = HEntry(max(tot - h.f, 0.0), h.d_in, h.d_out)
+        else:
+            frac = stats.lifespan_frac(ent_type, tuple(c.interval), is_edge=is_edge)
+            h = HEntry(frac * tot, 0.0, 0.0)
+        if acc is None:
+            acc = h
+        else:
+            if c.conj == Q.AND:
+                f = min(acc.f, h.f)
+            else:
+                f = max(acc.f, h.f)
+            wsum = max(acc.f + h.f, 1e-9)
+            acc = HEntry(
+                f,
+                (acc.d_in * acc.f + h.d_in * h.f) / wsum,
+                (acc.d_out * acc.f + h.d_out * h.f) / wsum,
+            )
+    if acc is None:
+        return tot, 0.0, 0.0
+    return acc.f, acc.d_in, acc.d_out
+
+
+def estimate_segment(
+    stats: GraphStats,
+    v_preds: Sequence[Q.VertexPredicate],
+    e_preds: Sequence[Q.EdgePredicate],
+    coeffs: dict,
+    trav_arrivals_by_type: np.ndarray,
+) -> List[StepEstimate]:
+    steps: List[StepEstimate] = []
+    prev_m_e = None
+    for i, vp in enumerate(v_preds):
+        V_sigma = stats.type_count(vp.vtype)
+        if i == 0:
+            a_v = V_sigma                                    # Eq. 1, init
+        else:
+            a_v = min(prev_m_e, V_sigma)                     # Eq. 1
+        f_v, d_in, d_out = _clause_freq(stats, vp.clauses, vp.vtype, is_edge=False)
+        if not vp.clauses:
+            f_v = V_sigma
+        m_v = a_v * (f_v / max(V_sigma, 1e-9))               # Eq. 2
+        if i >= len(e_preds):
+            steps.append(StepEstimate(a_v, f_v, m_v, 0, 0, 0, 0.0, V_sigma, 0.0, False))
+            break
+        ep = e_preds[i]
+        deg = stats.degree(vp.vtype, ep.etype, ep.direction)
+        if deg == 0.0 and (d_in + d_out) > 0:
+            deg = d_in + d_out                               # paper fallback δ
+        a_e = m_v * max(deg, 0.0)                            # Eq. 3
+        E_sigma = stats.etype_count(ep.etype)
+        f_e, _, _ = _clause_freq(stats, ep.clauses, ep.etype, is_edge=True)
+        if not ep.clauses:
+            f_e = E_sigma
+        sel_e = f_e / max(E_sigma, 1e-9)
+        if ep.etr_op != -1:
+            sel_e *= stats.etr_select.get(ep.etr_op, 0.5)    # beyond-paper term
+        m_e = a_e * sel_e                                    # Eq. 4
+        # ---- execution-time terms (dense type-sliced engine)
+        nxt_type = v_preds[i + 1].vtype if i + 1 < len(v_preds) else -1
+        e_slice = (
+            float(trav_arrivals_by_type[nxt_type])
+            if nxt_type >= 0
+            else float(trav_arrivals_by_type.sum())
+        )
+        t = (
+            coeffs["theta0"]
+            + (coeffs["theta_init"] if i == 0 else coeffs["theta_v"]) * V_sigma
+            + coeffs["theta_e"] * e_slice
+            + (coeffs["theta_etr"] * e_slice if ep.etr_op != -1 else 0.0)
+            + coeffs["theta_m"] * max(m_e, 0.0)
+        )
+        steps.append(StepEstimate(a_v, f_v, m_v, a_e, f_e, m_e, t, V_sigma, e_slice,
+                                  ep.etr_op != -1))
+        prev_m_e = max(m_e, 0.0)
+    return steps
+
+
+class Planner:
+    def __init__(self, graph, stats: GraphStats, coeffs: Optional[dict] = None):
+        self.g = graph
+        self.stats = stats
+        self.coeffs = coeffs or load_coeffs()
+        # traversal arrivals per vertex type (edge extent of a typed hop)
+        deg = graph.in_degree.astype(np.int64) + graph.out_degree.astype(np.int64)
+        self.trav_arrivals_by_type = np.zeros(graph.n_vertex_types, np.int64)
+        np.add.at(self.trav_arrivals_by_type, graph.v_type, deg)
+
+    def enumerate_plans(self, qry: Q.PathQuery) -> List[int]:
+        if qry.agg_op != Q.AGG_NONE:
+            return [0]
+        return list(range(qry.n_vertices))
+
+    def estimate(self, qry: Q.PathQuery, split: int) -> PlanEstimate:
+        n = qry.n_vertices
+        steps: List[StepEstimate] = []
+        if split > 0:
+            steps += estimate_segment(
+                self.stats, qry.v_preds[: split + 1], qry.e_preds[:split],
+                self.coeffs, self.trav_arrivals_by_type,
+            )
+        if (n - 1) - split > 0:
+            rev = qry.reversed()
+            m = (n - 1) - split
+            steps += estimate_segment(
+                self.stats, rev.v_preds[: m + 1], rev.e_preds[:m],
+                self.coeffs, self.trav_arrivals_by_type,
+            )
+        t = sum(s.t_ms for s in steps)
+        return PlanEstimate(split, t, steps)
+
+    def choose(self, qry: Q.PathQuery) -> PlanEstimate:
+        best = None
+        for split in self.enumerate_plans(qry):
+            est = self.estimate(qry, split)
+            if best is None or est.t_ms < best.t_ms:
+                best = est
+        return best
+
+
+# -------------------------------------------------------------- fitting util
+def fit_linear(features: np.ndarray, times_ms: np.ndarray) -> np.ndarray:
+    """Least-squares fit; features [n, k] → coefficients [k]."""
+    sol, *_ = np.linalg.lstsq(features, times_ms, rcond=None)
+    return sol

@@ -1,0 +1,1 @@
+from .loader import GraphBuilder, load_graph, save_graph  # noqa: F401

@@ -1,0 +1,141 @@
+"""Two-level graph partitioning (paper Sec. 4.4.1).
+
+Level 1: group vertices by *type* (the loader already makes ids type-major).
+Level 2: split each typed group into ``p`` topological sub-partitions.  The
+paper uses METIS on the same-type subgraph with edge-lifespan weights; METIS
+is unavailable offline, so we use a greedy BFS block-growing partitioner with
+the same objective (balanced sizes, low weighted edge-cut) and report the cut
+quality so the approximation is measurable.
+
+Placement: sub-partitions are assigned round-robin over workers, so each
+worker holds ~t·p/w sub-partitions with ~p/w per type — the paper's load
+balancing argument for typed supersteps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List
+
+import numpy as np
+
+from ..core.graph import TemporalGraph
+
+
+@dataclasses.dataclass
+class Partitioning:
+    part_of: np.ndarray        # int32[V] — global sub-partition id
+    worker_of_part: np.ndarray # int32[n_parts]
+    n_parts: int
+    n_workers: int
+    stats: Dict
+
+    def worker_of(self, vid: int) -> int:
+        return int(self.worker_of_part[self.part_of[vid]])
+
+
+def _greedy_bfs_blocks(n: int, adj_ptr, adj_idx, weights, p: int) -> np.ndarray:
+    """Split [0, n) into p balanced blocks by BFS growth; returns block ids."""
+    target = max(1, -(-n // p))
+    block = np.full(n, -1, np.int32)
+    order = np.argsort(-np.diff(adj_ptr))  # seed from high degree
+    cur = 0
+    filled = 0
+    q: deque = deque()
+    for seed in order:
+        if block[seed] != -1:
+            continue
+        q.append(seed)
+        while q:
+            v = q.popleft()
+            if block[v] != -1:
+                continue
+            block[v] = cur
+            filled += 1
+            if filled >= target:
+                cur = min(cur + 1, p - 1)
+                filled = 0
+                q.clear()
+                break
+            for e in range(adj_ptr[v], adj_ptr[v + 1]):
+                u = adj_idx[e]
+                if block[u] == -1:
+                    q.append(u)
+    block[block == -1] = cur
+    return block
+
+
+def partition_graph(
+    graph: TemporalGraph,
+    n_workers: int = 8,
+    parts_per_type: int = 4,
+    hash_baseline: bool = False,
+) -> Partitioning:
+    V = graph.n_vertices
+    part_of = np.zeros(V, np.int32)
+    if hash_baseline:
+        # Giraph's default: hash partitioning by vertex id.
+        n_parts = n_workers * parts_per_type
+        part_of = (np.arange(V, dtype=np.int64) * 2654435761 % n_parts).astype(np.int32)
+        worker = (np.arange(n_parts) % n_workers).astype(np.int32)
+        cut = _edge_cut(graph, part_of)
+        return Partitioning(part_of, worker, n_parts, n_workers,
+                            dict(kind="hash", edge_cut=cut))
+
+    # same-type subgraph adjacency with lifespan-length edge weights
+    next_part = 0
+    for t in range(graph.n_vertex_types):
+        lo, hi = graph.type_ranges[t]
+        n = hi - lo
+        if n == 0:
+            continue
+        sel = (
+            (graph.e_src >= lo) & (graph.e_src < hi)
+            & (graph.e_dst >= lo) & (graph.e_dst < hi)
+        )
+        src = graph.e_src[sel] - lo
+        dst = graph.e_dst[sel] - lo
+        w = (graph.e_life[sel, 1] - graph.e_life[sel, 0]).astype(np.float64)
+        # symmetric CSR
+        s2 = np.concatenate([src, dst])
+        d2 = np.concatenate([dst, src])
+        order = np.argsort(s2, kind="stable")
+        adj_idx = d2[order].astype(np.int64)
+        adj_ptr = np.zeros(n + 1, np.int64)
+        np.cumsum(np.bincount(s2, minlength=n), out=adj_ptr[1:])
+        blocks = _greedy_bfs_blocks(n, adj_ptr, adj_idx,
+                                    np.concatenate([w, w])[order], parts_per_type)
+        part_of[lo:hi] = blocks + next_part
+        next_part += parts_per_type
+
+    n_parts = next_part if next_part else 1
+    worker = (np.arange(n_parts) % n_workers).astype(np.int32)
+    cut = _edge_cut(graph, part_of)
+    sizes = np.bincount(part_of, minlength=n_parts)
+    return Partitioning(
+        part_of, worker, n_parts, n_workers,
+        dict(kind="type+topo", edge_cut=cut,
+             size_imbalance=float(sizes.max() / max(sizes.mean(), 1)),
+             parts_per_type=parts_per_type),
+    )
+
+
+def _edge_cut(graph: TemporalGraph, part_of: np.ndarray) -> float:
+    if graph.n_edges == 0:
+        return 0.0
+    crossing = part_of[graph.e_src] != part_of[graph.e_dst]
+    w = (graph.e_life[:, 1] - graph.e_life[:, 0]).astype(np.float64)
+    return float((w * crossing).sum() / max(w.sum(), 1e-9))
+
+
+def reassign_on_failure(p: Partitioning, failed_worker: int) -> Partitioning:
+    """Rebalance a failed worker's sub-partitions over survivors (fault path)."""
+    survivors = [w for w in range(p.n_workers) if w != failed_worker]
+    new_worker = p.worker_of_part.copy()
+    j = 0
+    for i in range(p.n_parts):
+        if new_worker[i] == failed_worker:
+            new_worker[i] = survivors[j % len(survivors)]
+            j += 1
+    return Partitioning(p.part_of, new_worker, p.n_parts, p.n_workers,
+                        {**p.stats, "reassigned_from": failed_worker})

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package provides:
+  <name>.py — the pl.pallas_call with explicit BlockSpec VMEM tiling
+  ops.py    — the jit'd public wrapper (padding, GQA mapping, interpret flag)
+  ref.py    — the pure-jnp oracle used by the test sweeps
+
+Kernels are TPU-targeted and validated with ``interpret=True`` on CPU (this
+container has no TPU).  Models select kernels via ``impl='pallas'|'xla'``;
+the dry-run compiles the XLA path (Pallas does not lower on the CPU backend).
+
+Hot-spots covered:
+  bucket_scatter  — scatter-as-matmul segment reduction (engine superstep
+                    message delivery; GNN aggregation)
+  interval_warp   — fused TimeWarp bucket alignment (engine temporal modes)
+  flash_attention — blocked online-softmax GQA attention w/ causal + sliding
+                    window (LM train/prefill)
+  embedding_bag   — fused gather + segment-reduce over huge tables (DLRM)
+"""
+from . import bucket_scatter, embedding_bag, flash_attention, interval_warp  # noqa: F401

@@ -1,0 +1,2 @@
+from .ops import bucket_scatter  # noqa: F401
+from .ref import bucket_scatter_ref  # noqa: F401

@@ -1,0 +1,56 @@
+"""Scatter-as-matmul segment reduction for TPU.
+
+The engine's superstep delivery (and GNN aggregation) is a segment-sum of
+per-edge contributions into destination vertices.  Scatter is hostile to the
+TPU vector unit, but because traversal edges are pre-sorted by destination we
+can tile destinations into blocks of ``block_v`` rows, pad each block's edge
+range to ``block_e``, and compute
+
+    out[block] = onehot(local_dst).T @ contrib[block]      # [bv, be]·[be, C]
+
+— turning the scatter into an MXU matmul.  The host-side prep (ops.py)
+computes the per-block edge ranges once per graph (they are static).
+
+Grid: (n_blocks,).  VMEM per step: be·C + be·bv + bv·C floats.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scatter_kernel(contrib_ref, ldst_ref, o_ref, *, block_v: int):
+    contrib = contrib_ref[0].astype(jnp.float32)          # [be, C]
+    ldst = ldst_ref[0]                                    # [be] int32, -1 = pad
+    onehot = (
+        ldst[:, None] == jax.lax.iota(jnp.int32, block_v)[None, :]
+    ).astype(jnp.float32)                                 # [be, bv]
+    o_ref[0] = jax.lax.dot_general(
+        onehot, contrib, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)                                 # [bv, C]
+
+
+def bucket_scatter_pallas(
+    contrib_padded: jnp.ndarray,   # [n_blocks, block_e, C]
+    local_dst: jnp.ndarray,        # [n_blocks, block_e] int32 (-1 pad)
+    block_v: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n_blocks, block_e, C = contrib_padded.shape
+    kernel = functools.partial(_scatter_kernel, block_v=block_v)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, block_e, C), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, block_e), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_v, C), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block_v, C), contrib_padded.dtype),
+        interpret=interpret,
+    )(contrib_padded, local_dst)
+    return out.reshape(n_blocks * block_v, C)

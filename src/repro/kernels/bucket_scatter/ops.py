@@ -1,0 +1,63 @@
+"""Wrapper: static per-graph block layout + the pallas call."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .bucket_scatter import bucket_scatter_pallas
+from .ref import bucket_scatter_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ScatterLayout:
+    """Static block layout for a fixed (sorted) seg_ids array."""
+    gather_idx: np.ndarray   # int64[n_blocks * block_e] — edge id per padded slot
+    valid: np.ndarray        # bool same shape
+    local_dst: np.ndarray    # int32[n_blocks, block_e]
+    n_blocks: int
+    block_e: int
+    block_v: int
+    num_segments: int
+
+
+def build_layout(seg_ids: np.ndarray, num_segments: int,
+                 block_v: int = 256, block_e_mult: int = 256) -> ScatterLayout:
+    seg_ids = np.asarray(seg_ids)
+    assert (np.diff(seg_ids) >= 0).all(), "seg_ids must be sorted"
+    n_blocks = -(-num_segments // block_v)
+    counts = np.bincount(seg_ids // block_v, minlength=n_blocks)
+    block_e = max(block_e_mult, int(-(-counts.max(initial=1) // block_e_mult) * block_e_mult))
+    starts = np.zeros(n_blocks + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    gather = np.zeros((n_blocks, block_e), np.int64)
+    valid = np.zeros((n_blocks, block_e), bool)
+    ldst = np.full((n_blocks, block_e), -1, np.int32)
+    for b in range(n_blocks):
+        n = counts[b]
+        gather[b, :n] = np.arange(starts[b], starts[b] + n)
+        valid[b, :n] = True
+        ldst[b, :n] = seg_ids[starts[b]:starts[b] + n] - b * block_v
+    return ScatterLayout(gather.reshape(-1), valid.reshape(-1), ldst,
+                         n_blocks, block_e, block_v, num_segments)
+
+
+def bucket_scatter(
+    contrib: jnp.ndarray,            # [E, C]
+    seg_ids: jnp.ndarray,            # [E] sorted
+    num_segments: int,
+    layout: Optional[ScatterLayout] = None,
+    impl: str = "xla",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Segment-sum of contributions; layout enables the pallas path."""
+    if impl == "xla" or layout is None:
+        return bucket_scatter_ref(contrib, seg_ids, num_segments)
+    cp = contrib[jnp.asarray(layout.gather_idx)]
+    cp = cp * jnp.asarray(layout.valid, contrib.dtype)[:, None]
+    cp = cp.reshape(layout.n_blocks, layout.block_e, contrib.shape[1])
+    out = bucket_scatter_pallas(cp, jnp.asarray(layout.local_dst),
+                                layout.block_v, interpret=interpret)
+    return out[: num_segments]

@@ -1,0 +1,12 @@
+"""Oracle: plain sorted segment-sum (message delivery / GNN aggregation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bucket_scatter_ref(contrib: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int):
+    """contrib [E, C] float, seg_ids [E] int32 (sorted), → [num_segments, C]."""
+    return jax.ops.segment_sum(
+        contrib, seg_ids, num_segments=num_segments, indices_are_sorted=True
+    )

@@ -1,0 +1,2 @@
+from .ops import embedding_bag  # noqa: F401
+from .ref import embedding_bag_ref  # noqa: F401

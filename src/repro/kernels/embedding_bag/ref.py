@@ -1,0 +1,15 @@
+"""Oracle: EmbeddingBag = gather + masked reduce (JAX has no native one)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, indices: jnp.ndarray, mode: str = "sum"):
+    """table [V, D]; indices [B, L] int32 with -1 padding → [B, D]."""
+    safe = jnp.maximum(indices, 0)
+    rows = table[safe]                                   # [B, L, D]
+    mask = (indices >= 0).astype(table.dtype)[..., None]
+    out = (rows * mask).sum(axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(mask.sum(axis=1), 1.0)
+    return out

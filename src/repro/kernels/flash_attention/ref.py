@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for GQA flash attention (causal / sliding-window)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,       # [B, Hq, Sq, D]
+    k: jnp.ndarray,       # [B, Hkv, Sk, D]
+    v: jnp.ndarray,       # [B, Hkv, Sk, D]
+    causal: bool = True,
+    window: Optional[int] = None,   # sliding window size (None = full)
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,    # absolute position of q[0] (decode: cache length)
+) -> jnp.ndarray:
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s * scale
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    denom = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / denom, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,2 @@
+from .ops import interval_warp  # noqa: F401
+from .ref import interval_warp_ref  # noqa: F401

@@ -1,0 +1,47 @@
+"""Fused TimeWarp alignment kernel.
+
+Elementwise-heavy [N, B] op on the engine's hot path (dynamic modes run it
+per hop per entity).  Fusing the mask computation with the multiply keeps the
+bucket-state tile resident in VMEM and avoids materialising the bool mask in
+HBM.  Tiled over N with B (≤ 32 buckets) kept whole in the lane dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _warp_kernel(counts_ref, ivl_ref, bedges_ref, o_ref):
+    counts = counts_ref[...]           # [bn, B]
+    ivl = ivl_ref[...]                 # [bn, 2]
+    bedges = bedges_ref[...]           # [1, B+1]
+    lo = bedges[0, :-1][None, :]
+    hi = bedges[0, 1:][None, :]
+    mask = (ivl[:, 0:1] < hi) & (lo < ivl[:, 1:2])
+    o_ref[...] = counts * mask.astype(counts.dtype)
+
+
+def interval_warp_pallas(
+    counts: jnp.ndarray,    # [N, B]
+    ivl: jnp.ndarray,       # [N, 2]
+    bedges: jnp.ndarray,    # [B+1]
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    N, B = counts.shape
+    assert N % block_n == 0
+    return pl.pallas_call(
+        _warp_kernel,
+        grid=(N // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, B), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, B + 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, B), counts.dtype),
+        interpret=interpret,
+    )(counts, ivl, bedges.reshape(1, -1))

@@ -1,0 +1,21 @@
+"""Wrapper: padding + implementation selection."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .interval_warp import interval_warp_pallas
+from .ref import interval_warp_ref
+
+
+def interval_warp(counts, ivl, bedges, impl: str = "xla",
+                  block_n: int = 1024, interpret: bool = True):
+    if impl == "xla":
+        return interval_warp_ref(counts, ivl, bedges)
+    N = counts.shape[0]
+    pad = (-N) % block_n
+    if pad:
+        counts = jnp.pad(counts, ((0, pad), (0, 0)))
+        ivl = jnp.pad(ivl, ((0, pad), (0, 0)))
+    out = interval_warp_pallas(counts, ivl, bedges, block_n=block_n,
+                               interpret=interpret)
+    return out[:N]

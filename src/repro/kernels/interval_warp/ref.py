@@ -1,0 +1,16 @@
+"""Oracle: TimeWarp bucket alignment = counts × interval-overlap mask."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def interval_warp_ref(counts: jnp.ndarray, ivl: jnp.ndarray, bedges: jnp.ndarray):
+    """counts [N, B] float, ivl [N, 2] int32, bedges [B+1] int32 → [N, B].
+
+    Zeroes the count of every bucket the entity's validity interval does not
+    overlap — the dense form of ICM's TimeWarp alignment.
+    """
+    lo = bedges[:-1][None, :]
+    hi = bedges[1:][None, :]
+    mask = (ivl[:, 0:1] < hi) & (lo < ivl[:, 1:2])
+    return counts * mask.astype(counts.dtype)

@@ -1,0 +1,145 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+host devices build the production meshes; every cell's step function is
+jit-lowered with its in/out shardings, compiled, and its memory/cost/
+collective analyses are written to ``experiments/dryrun/*.json`` for the
+roofline report (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, load_arch
+from ..roofline.analysis import analyze_compiled, save_report
+from .mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def model_flops_for(arch_id: str, shape: str, spec) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) for training; 2·N·D inference."""
+    meta = spec.meta
+    n = meta.get("active_params") or meta.get("params")
+    if n is None:
+        return None
+    from ..configs import common
+    if shape in common.LM_SHAPES:
+        info = common.LM_SHAPES[shape]
+        tokens = info["batch"] * (info["seq"] if info["kind"] != "decode" else 1)
+        mult = 6.0 if info["kind"] == "train" else 2.0
+        return mult * float(n) * tokens
+    return None
+
+
+def run_cell(arch_id: str, shape: str, mesh_kind: str, skip_existing=False) -> dict:
+    tag = f"{arch_id}__{shape}__{mesh_kind}"
+    out_path = os.path.join(OUT_DIR, tag + ".json")
+    if skip_existing and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+    spec = load_arch(arch_id)
+    if shape in spec.skip:
+        rec = dict(arch=arch_id, shape=shape, mesh=mesh_kind,
+                   status="skipped", reason=spec.skip[shape])
+        os.makedirs(OUT_DIR, exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        with mesh:
+            cell = spec.shapes[shape](mesh)
+            fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings)
+            lowered = fn.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            print(f"[{tag}] memory_analysis: {mem}")
+            ca = compiled.cost_analysis()
+            print(f"[{tag}] cost_analysis flops={ca.get('flops', 0):.3e} "
+                  f"bytes={ca.get('bytes accessed', 0):.3e}")
+            trips = None
+            if hasattr(spec, "meta"):
+                trips = spec.meta.get("n_layers")
+            if trips is None and arch_id.startswith(
+                    ("llama", "minicpm", "gemma", "olmoe", "mixtral")):
+                import importlib
+                mod = importlib.import_module(
+                    f"repro.configs.{arch_id.replace('-', '_')}")
+                trips = mod.CONFIG.n_layers
+            rep = analyze_compiled(
+                compiled, chips, arch_id, shape, mesh_kind,
+                model_flops=model_flops_for(arch_id, shape, spec),
+                scan_trips=trips,
+                analytic_flops=getattr(cell, "analytic_flops", None))
+        rec = rep.to_json()
+        rec.update(status="ok", t_lower_s=t_lower, t_compile_s=t_compile,
+                   kind=cell.kind, note=cell.note)
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec = dict(arch=arch_id, shape=shape, mesh=mesh_kind, status="error",
+                   error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        print(f"[{tag}] FAILED: {rec['error']}")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def all_cells():
+    for arch_id in ARCH_IDS:
+        spec = load_arch(arch_id)
+        names = list(spec.shapes.keys()) + list(spec.skip.keys())
+        for shape in names:
+            yield arch_id, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = []
+    if args.all:
+        for arch_id, shape in all_cells():
+            for mk in meshes:
+                rec = run_cell(arch_id, shape, mk, args.skip_existing)
+                results.append(rec)
+                s = rec.get("status")
+                extra = (f"bottleneck={rec.get('bottleneck')}" if s == "ok"
+                         else rec.get("reason", rec.get("error", "")))
+                print(f"== {arch_id:16s} {shape:14s} {mk:6s} {s:8s} {extra}")
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mk in meshes:
+            results.append(run_cell(args.arch, args.shape, mk))
+    n_ok = sum(r.get("status") == "ok" for r in results)
+    n_skip = sum(r.get("status") == "skipped" for r in results)
+    n_err = sum(r.get("status") == "error" for r in results)
+    print(f"DRYRUN SUMMARY: ok={n_ok} skipped={n_skip} errors={n_err}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  Single pod = (16, 16) data×model = 256
+chips; multi-pod adds a leading pod axis = (2, 16, 16) = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over actually-present devices (tests / CPU benches)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,1 @@
+from . import dlrm, gnn, layers, transformer  # noqa: F401

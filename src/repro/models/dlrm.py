@@ -1,0 +1,139 @@
+"""DLRM (RM2 variant): huge sparse embedding tables → dot interaction → MLPs.
+
+JAX has no native EmbeddingBag — implemented as gather + masked reduce
+(`kernels/embedding_bag` provides the fused Pallas version; the XLA path is
+the oracle).  Tables are row-sharded over the model axis at scale (the DLRM
+analogue of the paper's type-based partitioning: the lookup hot path is a
+distributed gather).  ``retrieval_score`` scores one query against N
+candidates as a batched dot (no loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..kernels.embedding_bag import embedding_bag
+from .layers import mlp_apply, mlp_params, shard
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMCfg:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    bot_mlp: Sequence[int] = (13, 512, 256, 64)
+    top_mlp: Sequence[int] = (512, 512, 256, 1)
+    vocab_sizes: Optional[Sequence[int]] = None   # default 1M rows each
+    multi_hot: int = 1                            # lookups per field
+    dtype: object = jnp.float32
+    data_axes: Optional[tuple] = ("pod", "data")
+    model_axis: Optional[str] = "model"
+    ebag_impl: str = "xla"
+
+    def vocabs(self) -> List[int]:
+        if self.vocab_sizes is not None:
+            return list(self.vocab_sizes)
+        return [1_000_000] * self.n_sparse
+
+    def interaction_dim(self) -> int:
+        f = self.n_sparse + 1
+        return self.embed_dim + f * (f - 1) // 2
+
+    def param_count(self) -> int:
+        n = sum(self.vocabs()) * self.embed_dim
+        sizes = list(self.bot_mlp)
+        for i in range(len(sizes) - 1):
+            n += sizes[i] * sizes[i + 1] + sizes[i + 1]
+        tops = [self.interaction_dim()] + list(self.top_mlp)[1:]
+        for i in range(len(tops) - 1):
+            n += tops[i] * tops[i + 1] + tops[i + 1]
+        return n
+
+
+def init_params(cfg: DLRMCfg, key) -> Dict:
+    ks = jax.random.split(key, cfg.n_sparse + 2)
+    tables = [
+        (jax.random.normal(ks[i], (v, cfg.embed_dim)) * v ** -0.25).astype(cfg.dtype)
+        for i, v in enumerate(cfg.vocabs())
+    ]
+    top_sizes = [cfg.interaction_dim()] + list(cfg.top_mlp)[1:]
+    return dict(
+        tables=tables,
+        bot=mlp_params(ks[-2], list(cfg.bot_mlp)),
+        top=mlp_params(ks[-1], top_sizes),
+    )
+
+
+def param_specs(cfg: DLRMCfg, mesh=None) -> Dict:
+    tp = cfg.model_axis
+
+    def tspec(v):
+        if tp is None or (mesh is not None and v % mesh.shape[tp] != 0):
+            return P(None, None)
+        return P(tp, None)   # row-sharded tables
+
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    specs = jax.tree_util.tree_map(lambda _: P(), shapes)
+    specs["tables"] = [tspec(v) for v in cfg.vocabs()]
+    return specs
+
+
+def forward(cfg: DLRMCfg, params, dense, sparse_idx) -> jnp.ndarray:
+    """dense [B, n_dense] float; sparse_idx [B, n_sparse, multi_hot] int32.
+
+    Returns logits [B]."""
+    B = dense.shape[0]
+    dp = cfg.data_axes
+    x = shard(dense.astype(cfg.dtype), P(dp, None) if dp else None)
+    bot = mlp_apply(params["bot"], x, final_act=True)            # [B, d]
+    embs = []
+    for f in range(cfg.n_sparse):
+        idx = sparse_idx[:, f, :]
+        e = embedding_bag(params["tables"][f], idx, mode="sum", impl=cfg.ebag_impl)
+        embs.append(e)
+    feats = jnp.stack([bot] + embs, axis=1)                      # [B, F+1, d]
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)             # pairwise dots
+    fdim = feats.shape[1]
+    iu, ju = jnp.triu_indices(fdim, k=1)
+    flat = inter[:, iu, ju]                                      # [B, F(F-1)/2]
+    z = jnp.concatenate([bot, flat], axis=-1)
+    out = mlp_apply(params["top"], z)
+    return out[:, 0].astype(jnp.float32)
+
+
+def loss_fn(cfg: DLRMCfg, params, batch) -> jnp.ndarray:
+    logits = forward(cfg, params, batch["dense"], batch["sparse"])
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def serve_score(cfg: DLRMCfg, params, dense, sparse_idx) -> jnp.ndarray:
+    return jax.nn.sigmoid(forward(cfg, params, dense, sparse_idx))
+
+
+def retrieval_score(cfg: DLRMCfg, params, dense_q, sparse_q, cand_emb,
+                    top_k: int = 100):
+    """Score 1 query against n_candidates item embeddings (batched dot +
+    top-k), the retrieval_cand shape."""
+    q = forward_user_tower(cfg, params, dense_q, sparse_q)       # [1, d]
+    scores = (cand_emb.astype(jnp.float32) @ q[0].astype(jnp.float32))  # [N]
+    vals, idx = jax.lax.top_k(scores, top_k)
+    return vals, idx
+
+
+def forward_user_tower(cfg: DLRMCfg, params, dense, sparse_idx):
+    bot = mlp_apply(params["bot"], dense.astype(cfg.dtype), final_act=True)
+    embs = [
+        embedding_bag(params["tables"][f], sparse_idx[:, f, :], mode="sum",
+                      impl=cfg.ebag_impl)
+        for f in range(cfg.n_sparse)
+    ]
+    return (bot + sum(embs)).astype(jnp.float32)

@@ -1,0 +1,92 @@
+"""Shared layers: norms, rotary embedding, init, sharding helpers."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ------------------------------------------------------------------ sharding
+def shard(x, spec: Optional[P]):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def axis_size_divides(n: int, mesh, axis) -> bool:
+    if mesh is None or axis is None:
+        return True
+    sz = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        sz *= mesh.shape[a]
+    return n % sz == 0
+
+
+# -------------------------------------------------------------------- norms
+def rms_norm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+# -------------------------------------------------------------------- rotary
+def rope_freqs(d_head: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x [..., S, D]; positions [..., S] (absolute)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # [..., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- init
+def dense_init(key, shape: Sequence[int], in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def mlp_params(key, sizes: Sequence[int], dtype=jnp.float32):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [
+        dict(w=dense_init(ks[i], (sizes[i], sizes[i + 1]), dtype=dtype),
+             b=jnp.zeros((sizes[i + 1],), dtype))
+        for i in range(len(sizes) - 1)
+    ]
+
+
+def mlp_apply(params, x, act=jax.nn.relu, final_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def cross_entropy_loss(logits, labels, vocab_spec: Optional[P] = None):
+    """Token-mean CE; logits may be sharded over vocab (model axis)."""
+    logits = shard(logits.astype(jnp.float32), vocab_spec)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (lse - ll).mean()

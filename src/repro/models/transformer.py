@@ -1,0 +1,523 @@
+"""Configurable LM transformer family (llama3 / minicpm / gemma3 / olmoe /
+mixtral) — GQA + RoPE + SwiGLU, optional MoE, sliding-window & local:global
+attention patterns, scan-over-layers with remat, MaxText-style sharding.
+
+Design notes (dry-run relevant):
+  * Layers are scanned (stacked [L, ...] params) so the HLO is O(1) in depth;
+    remat policy saves only the layer-boundary carry, which is sharded
+    (sequence-parallel) over the model axis so 126-layer × 4k-seq activations
+    fit HBM (DESIGN.md §5).
+  * Per-layer attention windows are a scanned int32[L] array (2^30 = full
+    attention), so gemma3's 5:1 local:global pattern and mixtral's SWA share
+    one uniform scanned layer.
+  * Decode KV caches are sharded over the model axis on the kv-head dim when
+    divisible, else on d_head (scores/outputs recombine with a small
+    all-reduce) — this keeps 126×32k caches inside 16 GB/chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..kernels.flash_attention import flash_attention
+from .layers import apply_rope, cross_entropy_loss, rms_norm, shard
+
+FULL_WINDOW = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerCfg:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-6
+    moe: Optional[MoECfg] = None
+    sliding_window: Optional[int] = None   # local window size
+    global_every: int = 0                  # 0: uniform; k: every k-th layer full
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    scan_layers: bool = True
+    remat: bool = True
+    moe_group_map: str = "vmap"            # 'vmap' | 'scan' (sequential groups,
+                                           # E·C·F temp divided by group count)
+    gqa_native: bool = False               # grouped-einsum GQA (§Perf it. 2)
+                                           # False = baseline repeat-KV path
+    decode_kv_constraint: str = ""         # ''|'dh'|'head': pre-shard the new
+                                           # KV token to the cache layout so
+                                           # DUS never reshards the full cache
+    remat_inner: bool = False              # checkpoint MoE groups & attn
+                                           # chunks (bwd recompute, temp ↓)
+    kv_cache_quant: bool = False           # int8 KV cache w/ per-token-head
+                                           # scales (≈2× decode memory floor)
+    attention_impl: str = "xla"            # 'xla' | 'pallas' | 'pallas_interpret'
+    # sharding axis names (None disables constraints, e.g. smoke tests)
+    data_axes: Optional[tuple] = ("pod", "data")
+    model_axis: Optional[str] = "model"
+    seq_shard_carry: bool = True           # sequence-parallel layer boundary
+
+    @property
+    def full_attention_only(self) -> bool:
+        return self.sliding_window is None
+
+    def layer_windows(self) -> np.ndarray:
+        w = np.full(self.n_layers, FULL_WINDOW, np.int32)
+        if self.sliding_window is not None:
+            w[:] = self.sliding_window
+            if self.global_every > 0:
+                w[self.global_every - 1 :: self.global_every] = FULL_WINDOW
+        return w
+
+    def param_count(self) -> int:
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        attn = D * self.n_heads * self.d_head * 2 + D * self.n_kv_heads * self.d_head * 2
+        if self.moe:
+            mlp = self.moe.n_experts * 3 * D * self.moe.d_ff + D * self.moe.n_experts
+        else:
+            mlp = 3 * D * F
+        return V * D * (1 if self.tie_embeddings else 2) + L * (attn + mlp + 2 * D) + D
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        D, L = self.d_model, self.n_layers
+        attn = D * self.n_heads * self.d_head * 2 + D * self.n_kv_heads * self.d_head * 2
+        mlp = self.moe.top_k * 3 * D * self.moe.d_ff + D * self.moe.n_experts
+        return self.vocab * D + L * (attn + mlp + 2 * D) + D
+
+
+# ------------------------------------------------------------------- params
+def init_params(cfg: TransformerCfg, key) -> Dict:
+    D, L = cfg.d_model, cfg.n_layers
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 12)
+    dt = cfg.dtype
+
+    def ninit(k, shape, fan_in):
+        return (jax.random.normal(k, shape) * fan_in ** -0.5).astype(dt)
+
+    layers = dict(
+        ln1=jnp.ones((L, D), dt),
+        ln2=jnp.ones((L, D), dt),
+        wq=ninit(ks[0], (L, D, Hq * Dh), D),
+        wk=ninit(ks[1], (L, D, Hkv * Dh), D),
+        wv=ninit(ks[2], (L, D, Hkv * Dh), D),
+        wo=ninit(ks[3], (L, Hq * Dh, D), Hq * Dh),
+    )
+    if cfg.moe:
+        E, Fe = cfg.moe.n_experts, cfg.moe.d_ff
+        layers.update(
+            router=ninit(ks[4], (L, D, E), D),
+            wg=ninit(ks[5], (L, E, D, Fe), D),
+            wu=ninit(ks[6], (L, E, D, Fe), D),
+            wd=ninit(ks[7], (L, E, Fe, D), Fe),
+        )
+    else:
+        F = cfg.d_ff
+        layers.update(
+            wg=ninit(ks[5], (L, D, F), D),
+            wu=ninit(ks[6], (L, D, F), D),
+            wd=ninit(ks[7], (L, F, D), F),
+        )
+    params = dict(
+        embed=ninit(ks[8], (cfg.vocab, D), D),
+        ln_f=jnp.ones((D,), dt),
+        layers=layers,
+    )
+    if not cfg.tie_embeddings:
+        params["head"] = ninit(ks[9], (D, cfg.vocab), D)
+    return params
+
+
+def param_specs(cfg: TransformerCfg, mesh=None) -> Dict:
+    """PartitionSpecs mirroring init_params (FSDP over data × TP over model)."""
+    dp, tp = cfg.data_axes, cfg.model_axis
+    if dp is None or tp is None:
+        none_tree = jax.tree_util.tree_map(lambda _: P(), init_shapes(cfg))
+        return none_tree
+
+    def div(n, axis):
+        if mesh is None:
+            return axis
+        sz = np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))])
+        return axis if n % sz == 0 else None
+
+    Hq, Hkv, Dh, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_model
+    layers = dict(
+        ln1=P(None, None),
+        ln2=P(None, None),
+        wq=P(None, div(D, dp), div(Hq * Dh, tp)),
+        wk=P(None, div(D, dp), div(Hkv * Dh, tp)),
+        wv=P(None, div(D, dp), div(Hkv * Dh, tp)),
+        wo=P(None, div(Hq * Dh, tp), div(D, dp)),
+    )
+    if cfg.moe:
+        E, Fe = cfg.moe.n_experts, cfg.moe.d_ff
+        e_ax = div(E, tp)
+        if e_ax is not None:   # expert parallelism over the model axis
+            layers.update(
+                router=P(None, None, None),
+                wg=P(None, e_ax, div(D, dp), None),
+                wu=P(None, e_ax, div(D, dp), None),
+                wd=P(None, e_ax, None, div(D, dp)),
+            )
+        else:                  # tensor-parallel inside each expert
+            layers.update(
+                router=P(None, None, None),
+                wg=P(None, None, div(D, dp), div(Fe, tp)),
+                wu=P(None, None, div(D, dp), div(Fe, tp)),
+                wd=P(None, None, div(Fe, tp), div(D, dp)),
+            )
+    else:
+        F = cfg.d_ff
+        layers.update(
+            wg=P(None, div(D, dp), div(F, tp)),
+            wu=P(None, div(D, dp), div(F, tp)),
+            wd=P(None, div(F, tp), div(D, dp)),
+        )
+    specs = dict(
+        embed=P(div(cfg.vocab, tp), None),
+        ln_f=P(None),
+        layers=layers,
+    )
+    if not cfg.tie_embeddings:
+        specs["head"] = P(None, div(cfg.vocab, tp))
+    return specs
+
+
+def init_shapes(cfg: TransformerCfg):
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------------ compute
+def _attention(cfg: TransformerCfg, lp, x, positions, window, cache=None,
+               cache_len=None):
+    """One attention sub-layer.  x [B, S, D]; window traced int32."""
+    B, S, D = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    tp, dp = cfg.model_axis, cfg.data_axes
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = (h @ lp["wq"]).reshape(B, S, Hq, Dh).transpose(0, 2, 1, 3)
+    k = (h @ lp["wk"]).reshape(B, S, Hkv, Dh).transpose(0, 2, 1, 3)
+    v = (h @ lp["wv"]).reshape(B, S, Hkv, Dh).transpose(0, 2, 1, 3)
+    q = shard(q, P(dp, tp, None, None) if tp else None)
+    k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+
+    if cache is not None:
+        if cfg.decode_kv_constraint == "dh" and tp:
+            k = shard(k, P(dp, None, None, tp))
+            v = shard(v, P(dp, None, None, tp))
+        elif cfg.decode_kv_constraint == "head" and tp:
+            k = shard(k, P(dp, tp, None, None))
+            v = shard(v, P(dp, tp, None, None))
+        pos = cache_len - 1                          # scalar position of token
+        if cfg.kv_cache_quant:
+            qk8, qv8, sk, sv = cache                 # int8 caches + scales
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            qk8 = jax.lax.dynamic_update_slice(qk8, kq, (0, 0, pos, 0))
+            qv8 = jax.lax.dynamic_update_slice(qv8, vq, (0, 0, pos, 0))
+            sk = jax.lax.dynamic_update_slice(sk, ks, (0, 0, pos))
+            sv = jax.lax.dynamic_update_slice(sv, vs, (0, 0, pos))
+            ck = qk8.astype(jnp.float32) * sk.astype(jnp.float32)[..., None]
+            cv = qv8.astype(jnp.float32) * sv.astype(jnp.float32)[..., None]
+            new_quant_cache = (qk8, qv8, sk, sv)
+        else:
+            ck, cv = cache                           # [B, Hkv, Smax, Dh]
+            ck = jax.lax.dynamic_update_slice(ck, k, (0, 0, pos, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v, (0, 0, pos, 0))
+            new_quant_cache = None
+        Smax = ck.shape[2]
+        group = Hq // Hkv
+        if cfg.gqa_native:
+            # GQA-native grouped einsum: never materialise the repeated
+            # [B, Hq, Smax, Dh] cache (§Perf iteration 2 — the repeat costs
+            # group× cache bytes of HBM temp AND forces an involuntary
+            # reshard of the d_head-sharded cache).
+            qg = q.reshape(B, Hkv, group, S, Dh)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                           ck.astype(jnp.float32)) * (Dh ** -0.5)
+            kpos = jnp.arange(Smax)[None, None, None, None, :]
+            valid = (kpos < cache_len) & (kpos > pos - window)
+            s = jnp.where(valid, s, -1e30)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bkgqs,bksd->bkgqd", p, cv.astype(jnp.float32))
+            o = o.reshape(B, Hq, S, Dh).astype(x.dtype)
+        else:
+            # baseline: repeat KV heads to Hq (straightforward port)
+            kk = jnp.repeat(ck, group, axis=1)
+            vv = jnp.repeat(cv, group, axis=1)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                           kk.astype(jnp.float32)) * (Dh ** -0.5)
+            kpos = jnp.arange(Smax)[None, None, None, :]
+            valid = (kpos < cache_len) & (kpos > pos - window)
+            s = jnp.where(valid, s, -1e30)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bhkd->bhqd", p,
+                           vv.astype(jnp.float32)).astype(x.dtype)
+        new_cache = new_quant_cache if cfg.kv_cache_quant else (ck, cv)
+    else:
+        # flash path when the window is static; otherwise (scanned layers pass
+        # a traced per-layer window) a q-chunked masked attention that never
+        # materialises [B, H, S, S] — transient is [B, H, chunk, S].
+        if isinstance(window, (int, np.integer)):
+            win = None if window >= FULL_WINDOW else int(window)
+            o = flash_attention(q, k, v, causal=True, window=win,
+                                impl=cfg.attention_impl)
+        else:
+            o = _chunked_attention(q, k, v, window, Dh, native=cfg.gqa_native,
+                                   remat_chunks=cfg.remat_inner)
+        o = o.astype(x.dtype)
+        new_cache = None
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, Hq * Dh)
+    out = o @ lp["wo"]
+    return x + out, new_cache
+
+
+def _chunked_attention(q, k, v, window, Dh, chunk: int = 512,
+                       native: bool = False, remat_chunks: bool = False):
+    """Causal + sliding-window GQA attention, chunked over query blocks so the
+    score transient is [B, H, chunk, S].  ``window`` may be traced.
+    native=True consumes KV with grouped einsums (no group× repeat in HBM)."""
+    B, Hq, S, _ = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    if native:
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+    else:
+        kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+        vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kpos = jnp.arange(S, dtype=jnp.int32)
+
+    if native:
+        qc = q.reshape(B, Hkv, group, n_chunks, chunk, q.shape[-1])
+        qc = qc.transpose(3, 0, 1, 2, 4, 5)        # [n, B, Hkv, g, c, D]
+    else:
+        qc = q.reshape(B, Hq, n_chunks, chunk, q.shape[-1]).transpose(2, 0, 1, 3, 4)
+
+    def one(args):
+        i, qb = args
+        qpos = i * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - window)
+        if native:
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qb.astype(jnp.float32), kf)
+            s = jnp.where(mask[None, None, None], s * (Dh ** -0.5), -1e30)
+            p = jax.nn.softmax(s, axis=-1)
+            return jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qb.astype(jnp.float32), kf)
+        s = jnp.where(mask[None, None], s * (Dh ** -0.5), -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+
+    fn = jax.checkpoint(one) if remat_chunks else one
+    out = jax.lax.map(fn, (jnp.arange(n_chunks), qc))
+    if native:
+        out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, n_chunks * chunk, -1)
+    else:
+        out = out.transpose(1, 2, 0, 3, 4).reshape(B, Hq, n_chunks * chunk, -1)
+    return out[:, :, :S]
+
+
+def _mlp(cfg: TransformerCfg, lp, x):
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        g = jax.nn.silu(h @ lp["wg"]) * (h @ lp["wu"])
+        g = shard(g, P(cfg.data_axes, None, cfg.model_axis) if cfg.model_axis else None)
+        return x + g @ lp["wd"]
+    # ---- MoE: sort-based dispatch (MegaBlocks/MaxText-style).  Tokens are
+    # grouped per sequence (group = batch row) so the expert buffers and the
+    # scatter stay local to the data shard; capacity C = cf·k·S/E per group.
+    # No [T, E, C] one-hot tensors are ever materialised.
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    C = max(1, int(m.capacity_factor * K * S / E))
+
+    def group_moe(hg):  # hg [S, D] — one group
+        logits = hg @ lp["router"]
+        gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        topw, topi = jax.lax.top_k(gates, K)                     # [S, K]
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+        flat_e = topi.reshape(-1)                                # [S*K]
+        flat_t = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
+        flat_w = topw.reshape(-1)
+        order = jnp.argsort(flat_e)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        # rank within expert = index − first index of that expert id
+        first = jnp.searchsorted(se, se, side="left")
+        epos = jnp.arange(S * K, dtype=jnp.int32) - first.astype(jnp.int32)
+        keep = (epos < C).astype(jnp.float32)
+        slot = jnp.clip(se * C + epos, 0, E * C - 1)
+        buf = jnp.zeros((E * C, D), cfg.dtype)
+        buf = buf.at[slot].add((hg[st].astype(jnp.float32) * keep[:, None]
+                                ).astype(cfg.dtype))
+        xe = buf.reshape(E, C, D)
+        ge = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, lp["wg"]))
+        ue = jnp.einsum("ecd,edf->ecf", xe, lp["wu"])
+        oe = jnp.einsum("ecf,efd->ecd", ge * ue, lp["wd"]).reshape(E * C, D)
+        contrib = oe[slot].astype(jnp.float32) * (sw * keep)[:, None]
+        out = jnp.zeros((S, D), jnp.float32).at[st].add(contrib)
+        return out.astype(x.dtype)
+
+    fn = jax.checkpoint(group_moe) if cfg.remat_inner else group_moe
+    if cfg.moe_group_map == "scan":
+        out = jax.lax.map(fn, h)          # sequential: temp ÷ n_groups
+    else:
+        out = jax.vmap(fn)(h)
+    return x + out
+
+
+def _layer(cfg: TransformerCfg, lp, x, positions, window):
+    x, _ = _attention(cfg, lp, x, positions, window)
+    x = _mlp(cfg, lp, x)
+    if cfg.seq_shard_carry and cfg.model_axis:
+        x = shard(x, P(cfg.data_axes, cfg.model_axis, None))
+    return x
+
+
+def forward(cfg: TransformerCfg, params, tokens) -> jnp.ndarray:
+    """tokens [B, S] → logits [B, S, V] (vocab possibly model-sharded)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = shard(x, P(cfg.data_axes, None, None) if cfg.model_axis else None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    windows = jnp.asarray(cfg.layer_windows())
+
+    if cfg.scan_layers:
+        def body(carry, xs):
+            lp, w = xs
+            fn = _layer
+            if cfg.remat:
+                fn = jax.checkpoint(
+                    _layer, policy=jax.checkpoint_policies.nothing_saveable,
+                    static_argnums=(0,),
+                )
+            return fn(cfg, lp, carry, positions, w), None
+
+        x, _ = jax.lax.scan(body, x, (params["layers"], windows))
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x = _layer(cfg, lp, x, positions, int(cfg.layer_windows()[i]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    return shard(logits, P(cfg.data_axes, None, cfg.model_axis)
+                 if cfg.model_axis else None)
+
+
+def loss_fn(cfg: TransformerCfg, params, batch) -> jnp.ndarray:
+    logits = forward(cfg, params, batch["tokens"])
+    spec = P(cfg.data_axes, None, cfg.model_axis) if cfg.model_axis else None
+    return cross_entropy_loss(logits, batch["labels"], vocab_spec=spec)
+
+
+# -------------------------------------------------------------------- serve
+def cache_specs(cfg: TransformerCfg, mesh=None):
+    """Sharding for [L, B, Hkv, Smax, Dh] caches (see module docstring)."""
+    tp, dp = cfg.model_axis, cfg.data_axes
+    if tp is None:
+        return P()
+    tp_size = 1 if mesh is None else mesh.shape[tp]
+    if cfg.n_kv_heads % max(tp_size, 1) == 0:
+        return P(None, dp, tp, None, None)
+    return P(None, dp, None, None, tp)   # shard d_head instead
+
+
+def init_cache(cfg: TransformerCfg, batch: int, max_len: int):
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.d_head)
+    if cfg.kv_cache_quant:
+        sshape = shape[:-1]
+        return (jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                jnp.zeros(sshape, jnp.bfloat16), jnp.zeros(sshape, jnp.bfloat16))
+    return (jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))
+
+
+def _quantize_kv(x):
+    """Per-(token, head) symmetric int8: x [B, Hkv, S, Dh]."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def decode_step(cfg: TransformerCfg, params, cache, tokens, cache_len):
+    """One decode step.  tokens [B] int32; cache_len scalar (tokens so far,
+    including this one).  Returns (logits [B, V], new_cache)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :].astype(cfg.dtype)
+    positions = jnp.full((B, 1), cache_len - 1, jnp.int32)
+    windows = jnp.asarray(cfg.layer_windows())
+
+    def body(carry, xs):
+        lp, w, layer_cache = xs
+        y, new_kv = _attention(cfg, lp, carry, positions, w, cache=layer_cache,
+                               cache_len=cache_len)
+        y = _mlp(cfg, lp, y)
+        return y, new_kv
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], windows, cache))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x[:, 0] @ head.astype(cfg.dtype)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill(cfg: TransformerCfg, params, tokens, max_len: int):
+    """Prefill: run the full prompt, return (last logits, populated cache)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    windows = jnp.asarray(cfg.layer_windows())
+
+    def body(carry, xs):
+        lp, w = xs
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        k = (h @ lp["wk"]).reshape(B, S, Hkv, Dh).transpose(0, 2, 1, 3)
+        v = (h @ lp["wv"]).reshape(B, S, Hkv, Dh).transpose(0, 2, 1, 3)
+        k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+        y = _layer(cfg, lp, carry, positions, w)
+        pad = max_len - S
+        kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return y, (kc, vc)
+
+    x, cache = jax.lax.scan(body, x, (params["layers"], windows))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x[:, -1] @ head.astype(cfg.dtype)).astype(jnp.float32)
+    return logits, cache

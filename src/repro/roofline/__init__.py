@@ -1,0 +1,1 @@
+from .analysis import analyze_compiled, roofline_terms  # noqa: F401

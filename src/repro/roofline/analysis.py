@@ -1,0 +1,185 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs / (chips × 197e12)          [bf16 MXU peak]
+  memory     = HLO_bytes / (chips × 819e9)           [HBM bandwidth]
+  collective = collective_bytes / (chips × 50e9)     [per-link ICI]
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (whole-program totals —
+on the SPMD-partitioned module they are per-device values for most ops, but
+XLA reports the *global* program; we therefore divide by chip count, which
+matches the per-chip roofline definition in the assignment).
+
+collective_bytes is NOT in cost_analysis: we parse the post-SPMD optimized
+HLO (``compiled.as_text()``) and sum modeled per-chip byte volumes per
+collective op:
+  all-reduce: 2×size (ring, send+recv per chip) · all-gather: output size
+  reduce-scatter: input≈output×n ≈ modeled as output size × (n-1)/n ≈ size
+  all-to-all / collective-permute: size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:f|bf|s|u|pred|c)[0-9a-z]*)\[([0-9,]*)\][^=]*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?(?!-done)\b"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$",
+                      re.M)
+_WHILE_BODY_RE = re.compile(r"(?:body|condition)=%?([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(hlo_text: str):
+    """Yield (computation_name, text) blocks from post-optimization HLO."""
+    marks = [(m.start(), m.group(1)) for m in _COMP_RE.finditer(hlo_text)]
+    if not marks:
+        yield ("__all__", hlo_text)
+        return
+    for i, (pos, name) in enumerate(marks):
+        end = marks[i + 1][0] if i + 1 < len(marks) else len(hlo_text)
+        yield (name, hlo_text[pos:end])
+
+
+def collective_bytes_from_hlo(hlo_text: str, loop_scale: float = 1.0
+                              ) -> Dict[str, float]:
+    """Sum modeled per-chip collective bytes by op kind.
+
+    Collectives inside while-loop body/condition computations execute once
+    per trip — they are multiplied by ``loop_scale``; everything else counts
+    once.  ``-done`` halves of async pairs are excluded.
+    """
+    loop_comps = set(_WHILE_BODY_RE.findall(hlo_text))
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    for name, block in _split_computations(hlo_text):
+        mult = loop_scale if name in loop_comps else 1.0
+        for m in _COLL_RE.finditer(block):
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            size = _shape_bytes(dtype, dims)
+            if kind == "all-reduce":
+                out[kind] += mult * 2.0 * size
+            else:
+                out[kind] += mult * float(size)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    coll_by_kind: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: Optional[float] = None
+    useful_flops_frac: Optional[float] = None
+    memory_per_device: Optional[dict] = None
+    scan_scale: float = 1.0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze_compiled(compiled, chips: int, arch: str, shape: str, mesh_name: str,
+                     model_flops: Optional[float] = None,
+                     hlo_text: Optional[str] = None,
+                     scan_trips: Optional[int] = None,
+                     analytic_flops: Optional[float] = None) -> RooflineReport:
+    """``scan_trips``: XLA's cost_analysis counts a while-loop body ONCE.
+    Scanned-layer LMs are body-dominated, so when the program contains a
+    while loop we scale all three terms by
+    ``scan_scale = clip(model_flops/chips / hlo_flops, 1, scan_trips)`` —
+    anchored on the analytic 6·N·D FLOPs (see EXPERIMENTS.md §Roofline note).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):          # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))          # per-device SPMD program
+    byts = float(ca.get("bytes accessed", 0.0))  # per-device
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    scan_scale = 1.0
+    has_while = (" while(" in text) or ("while (" in text)
+    if scan_trips and scan_trips > 1 and has_while and model_flops and flops > 0:
+        per_chip_model = model_flops / chips
+        scan_scale = min(max(per_chip_model / flops, 1.0), float(scan_trips))
+    if analytic_flops is not None and flops > 0:
+        # XLA's CPU cost model counts reduce-window-lowered prefix sums
+        # quadratically; when an analytic per-chip FLOP count is provided and
+        # the HLO number is wildly above it, trust the analytic one.
+        per_chip = analytic_flops / chips
+        if flops > 50.0 * per_chip:
+            flops = per_chip
+    # collectives: loop-body ops scale by trip count, prologue/epilogue once
+    coll = collective_bytes_from_hlo(text, loop_scale=scan_scale)
+    coll_total = sum(coll.values())
+    flops *= scan_scale
+    byts *= scan_scale
+    # cost_analysis/HLO are per-device: divide by per-chip peaks only.
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll_total / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bott = max(terms, key=terms.get)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = dict(
+            argument_bytes=int(getattr(ma, "argument_size_in_bytes", 0)),
+            output_bytes=int(getattr(ma, "output_size_in_bytes", 0)),
+            temp_bytes=int(getattr(ma, "temp_size_in_bytes", 0)),
+            code_bytes=int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        )
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, collective_bytes=coll_total,
+        coll_by_kind=coll, t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bott, model_flops=model_flops,
+        useful_flops_frac=(model_flops / (flops * chips)
+                           if model_flops and flops else None),
+        memory_per_device=mem, scan_scale=scan_scale,
+    )
+
+
+def roofline_terms(report: RooflineReport) -> dict:
+    return dict(compute=report.t_compute, memory=report.t_memory,
+                collective=report.t_collective, bottleneck=report.bottleneck)
+
+
+def save_report(report: RooflineReport, path: str):
+    import os
+
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report.to_json(), f, indent=2)

@@ -1,0 +1,1 @@
+from . import checkpoint, compression, fault, optimizer, train_loop  # noqa: F401

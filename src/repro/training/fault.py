@@ -1,0 +1,151 @@
+"""Fault tolerance & elasticity: heartbeats, failure recovery, stragglers.
+
+At datacenter scale these mechanisms live in the job launcher; here they are
+implemented as a process-local control plane with the same state machine, so
+the recovery logic (the part that is actually subtle) is tested for real:
+
+* ``HeartbeatMonitor`` — workers report liveness; the monitor declares
+  failure after ``timeout_s`` silence.
+* ``FaultTolerantRunner`` — drives a step function; on (injected or detected)
+  worker failure it (a) reassigns the failed worker's graph partitions
+  (query engine path, `partitioner.reassign_on_failure`) or (b) restores the
+  latest checkpoint and replays (training path).  Restore may land on a
+  different worker count — elastic restart.
+* ``mitigate_stragglers`` — speculative re-execution: per-partition times are
+  monitored; partitions slower than ``k × median`` are duplicated on the
+  fastest idle worker and the first result wins (the paper's Q3/Q4 weak-
+  scaling stragglers motivate this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import checkpoint as ckpt
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_workers: int, timeout_s: float = 5.0):
+        self.timeout = timeout_s
+        self.last_beat: Dict[int, float] = {w: time.time() for w in range(n_workers)}
+        self.dead: set = set()
+
+    def beat(self, worker: int, t: Optional[float] = None):
+        if worker not in self.dead:
+            self.last_beat[worker] = time.time() if t is None else t
+
+    def kill(self, worker: int):
+        self.dead.add(worker)
+
+    def check(self, now: Optional[float] = None) -> List[int]:
+        now = time.time() if now is None else now
+        failed = [
+            w for w, t in self.last_beat.items()
+            if w not in self.dead and now - t > self.timeout
+        ]
+        failed += [w for w in self.dead if now is not None]
+        return sorted(set(failed))
+
+    def alive(self) -> List[int]:
+        now = time.time()
+        return [w for w in self.last_beat
+                if w not in self.dead and now - self.last_beat[w] <= self.timeout]
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    slowdown_factor: float = 3.0
+    max_duplicates: int = 2
+
+
+def mitigate_stragglers(
+    part_times_ms: np.ndarray,
+    part_worker: np.ndarray,
+    policy: StragglerPolicy = StragglerPolicy(),
+) -> Dict[int, int]:
+    """Given per-partition times and placements, pick partitions to duplicate.
+
+    Returns {partition_id: backup_worker}.  First-result-wins semantics are
+    applied by the caller (the superstep barrier takes min(primary, backup)).
+    """
+    med = float(np.median(part_times_ms))
+    worker_load = {}
+    for p, w in enumerate(part_worker):
+        worker_load[int(w)] = worker_load.get(int(w), 0.0) + float(part_times_ms[p])
+    slow = np.argsort(-part_times_ms)
+    out: Dict[int, int] = {}
+    for p in slow[: policy.max_duplicates]:
+        if part_times_ms[p] > policy.slowdown_factor * max(med, 1e-9):
+            # least-loaded worker that doesn't already own p
+            cands = sorted(worker_load, key=worker_load.get)
+            for w in cands:
+                if w != int(part_worker[p]):
+                    out[int(p)] = w
+                    worker_load[w] += float(part_times_ms[p])
+                    break
+    return out
+
+
+class FaultTolerantRunner:
+    """Checkpoint-restart training driver with failure injection hooks."""
+
+    def __init__(self, step_fn: Callable, state, ckpt_dir: str,
+                 ckpt_every: int = 10, keep_last: int = 3):
+        self.step_fn = step_fn
+        self.state = state
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.keep_last = keep_last
+        self.step = 0
+        self.recoveries = 0
+
+    def run(self, batches: Sequence, fail_at: Optional[Dict[int, Exception]] = None,
+            shardings=None) -> List[dict]:
+        """Run over batches; ``fail_at[step]`` raises at that step (injected
+        failure) and the runner restores + replays."""
+        fail_at = fail_at or {}
+        metrics: List[dict] = []
+        i = 0
+        injected = set()
+        while i < len(batches):
+            try:
+                if self.step in fail_at and self.step not in injected:
+                    injected.add(self.step)
+                    raise fail_at[self.step]
+                out = self.step_fn(self.state, batches[i])
+                self.state, m = out
+                self.step += 1
+                i += 1
+                metrics.append(dict(step=self.step, **m))
+                if self.step % self.ckpt_every == 0:
+                    ckpt.save(self.state, self.step, self.ckpt_dir, self.keep_last)
+            except Exception:
+                last = ckpt.latest_step(self.ckpt_dir)
+                if last is None:
+                    # no checkpoint yet: restart from scratch
+                    self.step = 0
+                    i = 0
+                    self.recoveries += 1
+                    continue
+                self.state, self.step = ckpt.restore(
+                    self.state, self.ckpt_dir, shardings=shardings)
+                i = self.step  # deterministic data order: replay from ckpt step
+                self.recoveries += 1
+        ckpt.save(self.state, self.step, self.ckpt_dir, self.keep_last)
+        return metrics
+
+
+def elastic_remesh(n_alive: int, want_shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Largest mesh shape (same rank) fitting the surviving workers —
+    elastic scale-down policy: shrink the data axis first."""
+    shape = list(want_shape)
+    total = int(np.prod(shape))
+    while total > n_alive and shape[0] > 1:
+        shape[0] //= 2
+        total = int(np.prod(shape))
+    if total > n_alive:
+        shape = [1] * (len(shape) - 1) + [n_alive]
+    return tuple(shape)

@@ -1,0 +1,86 @@
+"""AdamW with warmup-stable-decay (WSD, MiniCPM) and cosine schedules.
+
+Built from scratch (no optax offline).  Optimizer state mirrors the parameter
+pytree, so pjit shards it identically to the parameters (ZeRO-style sharded
+optimizer states for free under FSDP param sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptCfg:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: str = "cosine"       # 'const' | 'cosine' | 'wsd'
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    wsd_decay_frac: float = 0.1    # MiniCPM: final 10% exponential-ish decay
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: OptCfg, step) -> jnp.ndarray:
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        post = 1.0
+    elif cfg.schedule == "cosine":
+        t = jnp.clip((s - cfg.warmup_steps) /
+                     jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        post = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        decay_start = cfg.total_steps * (1.0 - cfg.wsd_decay_frac)
+        t = jnp.clip((s - decay_start) /
+                     jnp.maximum(cfg.total_steps - decay_start, 1), 0.0, 1.0)
+        # stable plateau, then fast decay to min_lr (MiniCPM Sec. 4)
+        post = jnp.where(s < decay_start, 1.0,
+                         cfg.min_lr_frac ** t)
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * post
+
+
+def init_state(params) -> Dict:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return dict(mu=zeros,
+                nu=jax.tree_util.tree_map(jnp.zeros_like, zeros),
+                step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def apply_updates(cfg: OptCfg, params, grads, state) -> Tuple[Any, Dict, Dict]:
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    b1, b2 = cfg.beta1, cfg.beta2
+    mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads)
+    nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["nu"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, dict(mu=mu, nu=nu, step=step), dict(lr=lr, grad_norm=gnorm)

@@ -1,0 +1,26 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device override is ONLY in
+# launch/dryrun.py, per the assignment).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.graphdata.ldbc import LdbcParams, generate_ldbc
+
+
+@pytest.fixture(scope="session")
+def small_static_graph():
+    return generate_ldbc(LdbcParams(n_persons=60, seed=3, dynamic=False))
+
+
+@pytest.fixture(scope="session")
+def small_dynamic_graph():
+    return generate_ldbc(LdbcParams(n_persons=40, seed=5, dynamic=True))
+
+
+@pytest.fixture(scope="session")
+def medium_static_graph():
+    return generate_ldbc(LdbcParams(n_persons=200, seed=9, dynamic=False))

@@ -1,0 +1,185 @@
+"""Engine vs exact oracle: all modes, all split plans, ETR ops, aggregates."""
+import numpy as np
+import pytest
+
+from repro.core import engine as E
+from repro.core import intervals as iv
+from repro.core import query as Q
+from repro.core.ref_engine import RefEngine
+from repro.graphdata.queries import make_workload
+
+
+def _schema(g):
+    b = g.meta["builder"]
+    return b.v_type_ids, b.e_type_ids, b.key_ids, b
+
+
+@pytest.fixture(scope="module")
+def oracle_static(small_static_graph):
+    return RefEngine(small_static_graph)
+
+
+@pytest.fixture(scope="module")
+def oracle_dynamic(small_dynamic_graph):
+    return RefEngine(small_dynamic_graph)
+
+
+def test_workload_counts_all_splits(small_static_graph, oracle_static):
+    wl = make_workload(small_static_graph, n_per_template=2, seed=1)
+    for inst in wl:
+        want = oracle_static.count(inst.qry, mode=E.MODE_STATIC)
+        for split in range(inst.qry.n_vertices):
+            got = E.count_results(small_static_graph, inst.qry, split=split)
+            assert got == want, (inst.template, split)
+
+
+@pytest.mark.parametrize("etr_op", [iv.FULLY_BEFORE, iv.STARTS_BEFORE,
+                                    iv.FULLY_AFTER, iv.STARTS_AFTER, iv.OVERLAPS])
+def test_etr_ops_exact(small_static_graph, oracle_static, etr_op):
+    vt, et, k, b = _schema(small_static_graph)
+    qry = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(vt["person"]),
+                 Q.VertexPredicate(vt["person"]),
+                 Q.VertexPredicate(vt["person"])),
+        e_preds=(Q.EdgePredicate(et["follows"], Q.DIR_OUT),
+                 Q.EdgePredicate(et["follows"], Q.DIR_OUT, etr_op=etr_op)),
+    )
+    want = oracle_static.count(qry)
+    for split in range(3):
+        got = E.count_results(small_static_graph, qry, split=split)
+        assert got == want, (etr_op, split)
+
+
+@pytest.mark.parametrize("direction", [Q.DIR_OUT, Q.DIR_IN, Q.DIR_BOTH])
+def test_directions(small_static_graph, oracle_static, direction):
+    vt, et, k, b = _schema(small_static_graph)
+    qry = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(vt["person"]), Q.VertexPredicate(-1)),
+        e_preds=(Q.EdgePredicate(-1, direction),),
+    )
+    want = oracle_static.count(qry)
+    got = E.count_results(small_static_graph, qry)
+    assert got == want
+
+
+def test_or_clauses_and_neq(small_static_graph, oracle_static):
+    vt, et, k, b = _schema(small_static_graph)
+    c1 = b.lookup_value(k["country"], "uk")
+    c2 = b.lookup_value(k["country"], "india")
+    qry = Q.PathQuery(
+        v_preds=(
+            Q.VertexPredicate(vt["person"],
+                              (Q.prop_clause(k["country"], "==", c1),
+                               Q.prop_clause(k["country"], "==", c2, conj=Q.OR))),
+            Q.VertexPredicate(vt["person"],
+                              (Q.prop_clause(k["country"], "!=", c1),)),
+        ),
+        e_preds=(Q.EdgePredicate(et["follows"], Q.DIR_OUT),),
+    )
+    want = oracle_static.count(qry)
+    got = E.count_results(small_static_graph, qry)
+    assert got == want and want > 0
+
+
+def test_time_clauses(small_static_graph, oracle_static):
+    vt, et, k, b = _schema(small_static_graph)
+    for cmp_name in ("overlaps", ">", "<", "in"):
+        qry = Q.PathQuery(
+            v_preds=(Q.VertexPredicate(vt["post"],
+                                       (Q.time_clause(cmp_name, (300, 800)),)),
+                     Q.VertexPredicate(vt["person"])),
+            e_preds=(Q.EdgePredicate(et["created"], Q.DIR_IN),),
+        )
+        want = oracle_static.count(qry)
+        got = E.count_results(small_static_graph, qry)
+        assert got == want, cmp_name
+
+
+def test_bucket_mode_exact(small_dynamic_graph, oracle_dynamic):
+    wl = make_workload(small_dynamic_graph, templates=("Q2", "Q8"),
+                       n_per_template=2, seed=2)
+    for inst in wl:
+        want = oracle_dynamic.count(inst.qry, mode=E.MODE_BUCKET, n_buckets=16)
+        out = E.execute(small_dynamic_graph, inst.qry, mode=E.MODE_BUCKET,
+                        n_buckets=16)
+        np.testing.assert_allclose(np.asarray(out.total), want, atol=1e-4)
+
+
+def test_interval_mode_distinct_counts(small_dynamic_graph, oracle_dynamic):
+    vt, et, k, b = _schema(small_dynamic_graph)
+    w = b.lookup_value(k["worksAt"], "company1")
+    qry = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(vt["person"],
+                                   (Q.prop_clause(k["worksAt"], "==", w),)),
+                 Q.VertexPredicate(vt["person"])),
+        e_preds=(Q.EdgePredicate(et["follows"], Q.DIR_OUT),),
+    )
+    want = oracle_dynamic.count(qry, mode=E.MODE_INTERVAL, n_buckets=16)
+    for split in range(2):
+        got = E.count_results(small_dynamic_graph, qry, split=split,
+                              mode=E.MODE_INTERVAL, n_buckets=16)
+        assert got == want
+
+
+def test_aggregate_count_static(small_static_graph, oracle_static):
+    vt, et, k, b = _schema(small_static_graph)
+    qry = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(vt["person"]), Q.VertexPredicate(vt["post"])),
+        e_preds=(Q.EdgePredicate(et["likes"], Q.DIR_OUT),),
+        agg_op=Q.AGG_COUNT,
+    )
+    want = oracle_static.aggregate(qry)
+    out = E.execute(small_static_graph, qry)
+    pv = np.asarray(out.per_vertex)
+    got = {i: float(pv[i]) for i in np.nonzero(pv)[0]}
+    assert got == want
+
+
+def test_aggregate_minmax(small_static_graph, oracle_static):
+    vt, et, k, b = _schema(small_static_graph)
+    for op in (Q.AGG_MIN, Q.AGG_MAX):
+        qry = Q.PathQuery(
+            v_preds=(Q.VertexPredicate(vt["person"]),
+                     Q.VertexPredicate(vt["post"])),
+            e_preds=(Q.EdgePredicate(et["created"], Q.DIR_OUT),),
+            agg_op=op, agg_key=k["length"],
+        )
+        want = oracle_static.aggregate(qry)
+        out = E.execute(small_static_graph, qry)
+        pv = np.asarray(out.per_vertex)
+        mm = np.asarray(out.minmax)
+        got = {i: float(mm[i]) for i in np.nonzero(pv)[0]}
+        assert got == want, op
+
+
+def test_aggregate_bucket_timeseries(small_dynamic_graph, oracle_dynamic):
+    vt, et, k, b = _schema(small_dynamic_graph)
+    qry = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(vt["person"]), Q.VertexPredicate(vt["person"])),
+        e_preds=(Q.EdgePredicate(et["follows"], Q.DIR_OUT),),
+        agg_op=Q.AGG_COUNT,
+    )
+    want = oracle_dynamic.aggregate(qry, mode=E.MODE_BUCKET, n_buckets=16)
+    out = E.execute(small_dynamic_graph, qry, mode=E.MODE_BUCKET, n_buckets=16)
+    np.testing.assert_allclose(np.asarray(out.per_vertex), want, atol=1e-4)
+
+
+def test_single_vertex_query(small_static_graph, oracle_static):
+    vt, _, k, b = _schema(small_static_graph)
+    cty = b.lookup_value(k["country"], "us")
+    qry = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(vt["person"],
+                                   (Q.prop_clause(k["country"], "==", cty),)),),
+        e_preds=(),
+    )
+    want = oracle_static.count(qry)
+    got = E.count_results(small_static_graph, qry, split=0)
+    assert got == want and want > 0
+
+
+def test_etr_validation():
+    with pytest.raises(ValueError):
+        Q.PathQuery(
+            v_preds=(Q.VertexPredicate(0), Q.VertexPredicate(0)),
+            e_preds=(Q.EdgePredicate(0, etr_op=iv.OVERLAPS),),
+        )

@@ -1,0 +1,95 @@
+"""Type-sliced engine (§Perf path) ≡ dense engine ≡ oracle."""
+import numpy as np
+import pytest
+
+from repro.core import engine as E
+from repro.core import engine_sliced as ES
+from repro.core.ref_engine import RefEngine
+from repro.graphdata.queries import make_workload
+
+
+def test_slice_bounds(small_static_graph):
+    sb = ES.SliceBounds.from_graph(small_static_graph)
+    g = small_static_graph
+    assert sb.v[-1][1] == g.n_vertices
+    assert sb.e[-1][1] == 2 * g.n_edges
+    # edge slices are exactly the arrivals of the vertex slices
+    ptr = g.traversal["arr_ptr"]
+    for (vlo, vhi), (elo, ehi) in zip(sb.v, sb.e):
+        assert elo == ptr[vlo] and ehi == ptr[vhi]
+
+
+def test_sliced_equals_dense_all_templates(small_static_graph):
+    ref = RefEngine(small_static_graph)
+    wl = make_workload(small_static_graph, n_per_template=2, seed=33)
+    n = 0
+    for inst in wl:
+        if not ES.sliceable(inst.qry):
+            continue
+        want = ref.count(inst.qry)
+        for split in range(inst.qry.n_vertices):
+            dense = E.count_results(small_static_graph, inst.qry, split=split,
+                                    sliced=False)
+            sliced = E.count_results(small_static_graph, inst.qry, split=split,
+                                     sliced=True)
+            assert dense == sliced == want, (inst.template, split)
+        n += 1
+    assert n >= 10
+
+
+def test_sliced_bucket_and_aggregate(small_dynamic_graph):
+    ref = RefEngine(small_dynamic_graph)
+    wl = make_workload(small_dynamic_graph, templates=("Q2", "Q8"),
+                       n_per_template=2, seed=34)
+    for inst in wl:
+        want = ref.count(inst.qry, mode=E.MODE_BUCKET, n_buckets=16)
+        out = E.execute(small_dynamic_graph, inst.qry, mode=E.MODE_BUCKET,
+                        n_buckets=16, sliced=True)
+        np.testing.assert_allclose(np.asarray(out.total), want, atol=1e-4)
+    wla = make_workload(small_dynamic_graph, templates=("Q2",), n_per_template=1,
+                        seed=35, aggregate=True)
+    for inst in wla:
+        want = ref.aggregate(inst.qry, mode=E.MODE_BUCKET, n_buckets=16)
+        out = E.execute(small_dynamic_graph, inst.qry, mode=E.MODE_BUCKET,
+                        n_buckets=16, sliced=True)
+        np.testing.assert_allclose(np.asarray(out.per_vertex), want, atol=1e-4)
+
+
+def test_wildcard_type_not_sliceable():
+    from repro.core import query as Q
+
+    q = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(-1), Q.VertexPredicate(0)),
+        e_preds=(Q.EdgePredicate(0),),
+    )
+    assert not ES.sliceable(q)
+    with pytest.raises(ValueError):
+        # explicit sliced=True on an unsliceable query must fail loudly
+        from repro.graphdata.ldbc import LdbcParams, generate_ldbc
+        g = generate_ldbc(LdbcParams(n_persons=10, seed=0))
+        E.execute(g, q, sliced=True)
+
+
+def test_gqa_native_equivalence():
+    """Optimised GQA paths (decode + chunked train) match the baseline."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.gemma3_4b import SMOKE
+    from repro.models import transformer as tr
+
+    base = SMOKE
+    opt = dataclasses.replace(SMOKE, gqa_native=True)
+    p = tr.init_params(base, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, base.vocab)
+    f_b = tr.forward(base, p, toks)
+    f_o = tr.forward(opt, p, toks)
+    np.testing.assert_allclose(np.asarray(f_b), np.asarray(f_o), atol=2e-5)
+    cache_b = tr.init_cache(base, 2, 24)
+    cache_o = tr.init_cache(opt, 2, 24)
+    for t in range(4):
+        lb, cache_b = tr.decode_step(base, p, cache_b, toks[:, t], t + 1)
+        lo, cache_o = tr.decode_step(opt, p, cache_o, toks[:, t], t + 1)
+        np.testing.assert_allclose(np.asarray(lb), np.asarray(lo), atol=2e-5)

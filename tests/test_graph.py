@@ -1,0 +1,82 @@
+"""Graph container: type-major layout, traversal arrays, ETR rank tables."""
+import numpy as np
+import pytest
+
+from repro.core.graph import make_prop_column
+from repro.graphdata.loader import GraphBuilder, load_graph, save_graph
+
+
+def test_type_major_and_ranges(small_static_graph):
+    g = small_static_graph
+    assert (np.diff(g.v_type) >= 0).all(), "vertices must be type-major"
+    tr = g.type_ranges
+    for t in range(g.n_vertex_types):
+        lo, hi = tr[t]
+        if hi > lo:
+            assert (g.v_type[lo:hi] == t).all()
+    assert tr[:, 1].max() == g.n_vertices
+
+
+def test_traversal_arrays(small_static_graph):
+    g = small_static_graph
+    tr = g.traversal
+    E = g.n_edges
+    assert tr["t_src"].shape == (2 * E,)
+    # arrival-sorted
+    assert (np.diff(tr["t_dst"]) >= 0).all()
+    # each edge appears once forward, once backward
+    assert tr["t_isfwd"].sum() == E
+    # ptr consistency
+    ptr = tr["arr_ptr"]
+    assert ptr[0] == 0 and ptr[-1] == 2 * E
+    counts = np.bincount(tr["t_dst"], minlength=g.n_vertices)
+    np.testing.assert_array_equal(np.diff(ptr), counts)
+
+
+def test_etr_rank_tables_bruteforce(small_static_graph):
+    g = small_static_graph
+    tr = g.traversal
+    et = g.etr_tables
+    ptr = tr["arr_ptr"].astype(np.int64)
+    starts = tr["t_life"][:, 0].astype(np.int64)
+    ends = tr["t_life"][:, 1].astype(np.int64)
+    rng = np.random.default_rng(0)
+    for e in rng.integers(0, 2 * g.n_edges, size=50):
+        v = tr["t_src"][e]
+        seg = np.arange(ptr[v], ptr[v + 1])   # canonical order groups by t_dst
+        assert (tr["t_dst"][seg] == v).all()
+        arr_start = starts[seg]
+        arr_end = ends[seg]
+        # term 0: #(acc.start < cur.start)
+        assert et.dep_ranks[0, e] == (arr_start < starts[e]).sum()
+        # term 1: #(acc.start <= cur.start)
+        assert et.dep_ranks[1, e] == (arr_start <= starts[e]).sum()
+        # term 2: #(acc.start < cur.end)
+        assert et.dep_ranks[2, e] == (arr_start < ends[e]).sum()
+        # term 3: #(acc.end <= cur.start)
+        assert et.dep_ranks[3, e] == (arr_end <= starts[e]).sum()
+
+
+def test_prop_column_pivot():
+    col = make_prop_column(
+        4,
+        entity_ids=[0, 0, 2, 3, 0],
+        values=[5, 6, 7, 8, 9],
+        lifespans=[[0, 10], [10, 20], [0, 5], [2, 9], [20, 30]],
+    )
+    assert col.vals.shape == (4, 3)
+    assert set(col.vals[0]) == {5, 6, 9}
+    assert col.vals[1, 0] == -1
+    assert col.vals[2, 0] == 7 and col.vals[3, 0] == 8
+
+
+def test_save_load_roundtrip(tmp_path, small_static_graph):
+    g = small_static_graph
+    p = str(tmp_path / "g.npz")
+    save_graph(g, p)
+    g2 = load_graph(p)
+    assert g2.n_vertices == g.n_vertices and g2.n_edges == g.n_edges
+    np.testing.assert_array_equal(g2.e_src, g.e_src)
+    np.testing.assert_array_equal(g2.v_life, g.v_life)
+    k = next(iter(g.vprops))
+    np.testing.assert_array_equal(g2.vprops[k].vals, g.vprops[k].vals)

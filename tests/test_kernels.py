@@ -1,0 +1,103 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.intervals import bucket_edges
+from repro.kernels.bucket_scatter import bucket_scatter, bucket_scatter_ref
+from repro.kernels.bucket_scatter.ops import build_layout
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.interval_warp import interval_warp, interval_warp_ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 4, 2, 128, 64),
+    (2, 8, 8, 256, 64),
+    (1, 8, 1, 128, 128),   # MQA
+    (2, 2, 2, 192, 32),    # non-pow2 seq (pad path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64), (False, None)])
+def test_flash_attention_sweep(B, Hq, Hkv, S, D, dtype, causal, window):
+    if not causal and S % 64 != 0:
+        pytest.skip("non-causal pallas path requires divisible Sk")
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), dtype)
+    want = attention_ref(q, k, v, causal=causal, window=window)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          impl="pallas_interpret", block_q=64, block_k=64)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_decode_offset():
+    q = jnp.asarray(RNG.normal(size=(2, 4, 1, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 2, 256, 64)), jnp.float32)
+    for cache_len in (64, 199, 256):
+        want = attention_ref(q, k, v, causal=True, q_offset=cache_len - 1)
+        got = flash_attention(q, k, v, causal=True, q_offset=cache_len - 1,
+                              impl="pallas_interpret", block_q=8, block_k=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("E,V,C", [(1000, 100, 8), (5000, 700, 16), (300, 512, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bucket_scatter_sweep(E, V, C, dtype):
+    seg = np.sort(RNG.integers(0, V, size=E)).astype(np.int32)
+    contrib = jnp.asarray(RNG.normal(size=(E, C)), dtype)
+    lay = build_layout(seg, V, block_v=128, block_e_mult=128)
+    want = bucket_scatter_ref(contrib, jnp.asarray(seg), V)
+    got = bucket_scatter(contrib, jnp.asarray(seg), V, layout=lay,
+                         impl="pallas", interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_bucket_scatter_empty_segments():
+    seg = np.asarray([3, 3, 9], np.int32)
+    contrib = jnp.ones((3, 2), jnp.float32)
+    lay = build_layout(seg, 16, block_v=8, block_e_mult=8)
+    got = bucket_scatter(contrib, jnp.asarray(seg), 16, layout=lay,
+                         impl="pallas", interpret=True)
+    want = np.zeros((16, 2))
+    want[3] = 2
+    want[9] = 1
+    np.testing.assert_allclose(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("N,B", [(512, 8), (3000, 16), (100, 32)])
+def test_interval_warp_sweep(N, B):
+    cnts = jnp.asarray(RNG.normal(size=(N, B)), jnp.float32)
+    ivl = np.stack([RNG.integers(0, 500, N), RNG.integers(0, 1100, N)], 1)
+    be = jnp.asarray(bucket_edges(0, 1096, B))
+    want = interval_warp_ref(cnts, jnp.asarray(ivl.astype(np.int32)), be)
+    got = interval_warp(cnts, jnp.asarray(ivl.astype(np.int32)), be,
+                        impl="pallas", interpret=True, block_n=256)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("V,D,Bb,L", [(1000, 32, 64, 8), (257, 16, 33, 3),
+                                      (4096, 64, 16, 1)])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_embedding_bag_sweep(V, D, Bb, L, mode):
+    table = jnp.asarray(RNG.normal(size=(V, D)), jnp.float32)
+    idx = RNG.integers(-1, V, size=(Bb, L)).astype(np.int32)
+    want = embedding_bag_ref(table, jnp.asarray(idx), mode)
+    got = embedding_bag(table, jnp.asarray(idx), mode=mode, impl="pallas",
+                        interpret=True, block_b=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_embedding_bag_all_padding():
+    table = jnp.ones((10, 4), jnp.float32)
+    idx = jnp.full((4, 3), -1, jnp.int32)
+    got = embedding_bag(table, idx, impl="pallas", interpret=True, block_b=4)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((4, 4)))

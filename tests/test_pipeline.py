@@ -1,0 +1,83 @@
+"""GPipe pipeline schedule ≡ sequential layer application."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.pipeline import PipelineCfg, make_pipelined_forward
+
+
+def _layer_fn(lp, x):
+    return jnp.tanh(x @ lp["w"] + lp["b"])
+
+
+def test_pipeline_matches_sequential_one_stage():
+    """n_stages=1 on the single CPU device: schedule must equal plain scan."""
+    mesh = jax.make_mesh((1,), ("data",))
+    L, D = 4, 8
+    key = jax.random.PRNGKey(0)
+    params = dict(
+        w=jax.random.normal(key, (L, D, D)) * 0.3,
+        b=jnp.zeros((L, D)),
+    )
+    n_micro = 3
+    x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, 2, D))
+
+    cfg = PipelineCfg(axis="data", n_microbatches=n_micro)
+    with mesh:
+        fwd = make_pipelined_forward(_layer_fn, 1, cfg, mesh)
+        got = fwd(params, x)
+
+    def seq(xm):
+        h = xm
+        for i in range(L):
+            h = _layer_fn(dict(w=params["w"][i], b=params["b"][i]), h)
+        return h
+
+    want = jnp.stack([seq(x[m]) for m in range(n_micro)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_pipeline_bubble_math():
+    """Schedule length and bubble fraction (documentation invariant)."""
+    for n_stages, n_micro in [(4, 8), (16, 32)]:
+        ticks = n_micro + n_stages - 1
+        bubble = (n_stages - 1) / ticks
+        assert ticks > n_micro and bubble < 0.5
+
+
+def test_pipeline_lowers_multi_stage():
+    """Multi-stage schedule lowers/compiles on a 4-way host mesh via the
+    dry-run device override (structure check; numerics need >1 real dev)."""
+    import subprocess
+    import sys
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+import sys
+sys.path.insert(0, "src")
+from repro.training.pipeline import PipelineCfg, make_pipelined_forward
+
+def layer_fn(lp, x):
+    return jnp.tanh(x @ lp["w"] + lp["b"])
+
+mesh = jax.make_mesh((4,), ("data",))
+L, D, n_micro = 8, 16, 6
+params = dict(w=jnp.zeros((L, D, D)), b=jnp.zeros((L, D)))
+x = jnp.zeros((n_micro, 2, D))
+cfg = PipelineCfg(axis="data", n_microbatches=n_micro)
+with mesh:
+    fwd = make_pipelined_forward(layer_fn, 4, cfg, mesh)
+    lowered = jax.jit(fwd).lower(params, x)
+    compiled = lowered.compile()
+    txt = compiled.as_text()
+assert "collective-permute" in txt, "pipeline must move activations via ppermute"
+print("PIPELINE_LOWER_OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "PIPELINE_LOWER_OK" in out.stdout, out.stderr[-2000:]
+
+
+import os  # noqa: E402  (used in the subprocess test above)

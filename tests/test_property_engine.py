@@ -1,0 +1,116 @@
+"""Hypothesis property tests on system invariants."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import engine as E
+from repro.core import intervals as iv
+from repro.core import query as Q
+from repro.core.graph import TemporalGraph, make_prop_column
+from repro.core.ref_engine import RefEngine
+
+BUCKET_STEP = 10  # all generated times on a 10-unit grid, T = 160, B = 16
+
+
+@st.composite
+def tiny_graphs(draw):
+    """Random bucket-aligned temporal graphs with 2 vertex types, 1 prop."""
+    n_v = draw(st.integers(4, 14))
+    T = 160
+    v_type = np.asarray(draw(st.lists(st.integers(0, 1), min_size=n_v,
+                                      max_size=n_v)), np.int32)
+    v_type = np.sort(v_type)
+    starts = np.asarray(
+        draw(st.lists(st.integers(0, 8), min_size=n_v, max_size=n_v))
+    ) * BUCKET_STEP
+    v_life = np.stack([starts, np.full(n_v, T)], 1).astype(np.int32)
+    n_e = draw(st.integers(0, 25))
+    edges = []
+    for _ in range(n_e):
+        s = draw(st.integers(0, n_v - 1))
+        d = draw(st.integers(0, n_v - 1))
+        lo = max(v_life[s, 0], v_life[d, 0])
+        es = draw(st.integers(lo // BUCKET_STEP, 15)) * BUCKET_STEP
+        ee = draw(st.integers(es // BUCKET_STEP + 1, 16)) * BUCKET_STEP
+        edges.append((s, d, 0, es, ee))
+    if edges:
+        earr = np.asarray(edges, np.int64)
+        e_src, e_dst = earr[:, 0].astype(np.int32), earr[:, 1].astype(np.int32)
+        e_type = earr[:, 2].astype(np.int32)
+        e_life = earr[:, 3:5].astype(np.int32)
+    else:
+        e_src = e_dst = e_type = np.zeros(0, np.int32)
+        e_life = np.zeros((0, 2), np.int32)
+    pvals = np.asarray(draw(st.lists(st.integers(0, 2), min_size=n_v,
+                                     max_size=n_v)), np.int32)
+    col = make_prop_column(n_v, np.arange(n_v), pvals,
+                           np.stack([v_life[:, 0], v_life[:, 1]], 1))
+    return TemporalGraph(v_type, v_life, e_src, e_dst, e_type, e_life,
+                         {0: col}, {}, 2, 1, (0, T))
+
+
+@settings(max_examples=25, deadline=None)
+@given(g=tiny_graphs(), vt=st.integers(-1, 1), val=st.integers(0, 2),
+       etr=st.sampled_from([-1, iv.FULLY_BEFORE, iv.OVERLAPS]))
+def test_engine_matches_oracle_random_graphs(g, vt, val, etr):
+    qry = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(vt, (Q.prop_clause(0, "==", val),)),
+                 Q.VertexPredicate(-1),
+                 Q.VertexPredicate(-1)),
+        e_preds=(Q.EdgePredicate(-1, Q.DIR_OUT),
+                 Q.EdgePredicate(-1, Q.DIR_OUT, etr_op=etr)),
+    )
+    want = RefEngine(g).count(qry)
+    for split in range(3):
+        got = E.count_results(g, qry, split=split)
+        assert got == want, (split, got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=tiny_graphs(), val=st.integers(0, 2))
+def test_adding_clause_never_increases_count(g, val):
+    base = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(0), Q.VertexPredicate(-1)),
+        e_preds=(Q.EdgePredicate(-1, Q.DIR_OUT),),
+    )
+    narrowed = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(0, (Q.prop_clause(0, "==", val),)),
+                 Q.VertexPredicate(-1)),
+        e_preds=(Q.EdgePredicate(-1, Q.DIR_OUT),),
+    )
+    c_base = E.count_results(g, base)
+    c_narrow = E.count_results(g, narrowed)
+    assert c_narrow <= c_base
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=tiny_graphs())
+def test_bucket_totals_bound_static_count(g):
+    """Per-bucket counts are each ≤ static count (every temporal match is a
+    structural match)."""
+    qry = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(-1), Q.VertexPredicate(-1)),
+        e_preds=(Q.EdgePredicate(-1, Q.DIR_OUT),),
+    )
+    static = E.count_results(g, qry, mode=E.MODE_STATIC)
+    out = E.execute(g, qry, mode=E.MODE_BUCKET, n_buckets=16)
+    buckets = np.asarray(out.total)
+    assert buckets.max(initial=0.0) <= static + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(g=tiny_graphs())
+def test_direction_reversal_symmetry(g):
+    """count(A →follows B) == count(B ←follows A) with preds swapped."""
+    q1 = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(0), Q.VertexPredicate(1)),
+        e_preds=(Q.EdgePredicate(-1, Q.DIR_OUT),),
+    )
+    q2 = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(1), Q.VertexPredicate(0)),
+        e_preds=(Q.EdgePredicate(-1, Q.DIR_IN),),
+    )
+    assert E.count_results(g, q1) == E.count_results(g, q2)

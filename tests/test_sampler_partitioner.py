@@ -1,0 +1,68 @@
+"""Neighbor sampler + two-level partitioner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graphdata.partitioner import partition_graph, reassign_on_failure
+from repro.graphdata.sampler import CSR, sample_neighbors, sample_union_graph
+
+
+@pytest.fixture(scope="module")
+def csr():
+    rng = np.random.default_rng(0)
+    N, E = 500, 4000
+    src = rng.integers(0, N, E)
+    dst = rng.integers(0, N, E)
+    return CSR.from_edge_index(src, dst, N), src, dst, N
+
+
+def test_sample_neighbors_valid(csr):
+    c, src, dst, N = csr
+    frontier = jnp.asarray([0, 5, 10, 499], jnp.int32)
+    nbr = sample_neighbors(c, frontier, 8, jax.random.PRNGKey(0))
+    assert nbr.shape == (4, 8)
+    nbr = np.asarray(nbr)
+    indptr = np.asarray(c.indptr)
+    indices = np.asarray(c.indices)
+    for i, v in enumerate([0, 5, 10, 499]):
+        deg = indptr[v + 1] - indptr[v]
+        neigh = set(indices[indptr[v]:indptr[v + 1]]) if deg else {v}
+        assert set(nbr[i]) <= neigh
+
+
+def test_sample_union_graph_shapes(csr):
+    c, *_ = csr
+    seeds = jnp.arange(16, dtype=jnp.int32)
+    gids, src_l, dst_l = sample_union_graph(c, seeds, (4, 3), jax.random.PRNGKey(1))
+    assert gids.shape == (16 + 64 + 192,)
+    assert src_l.shape == dst_l.shape == (64 + 192,)
+    # local indices in range, dst of layer-1 edges point at seeds
+    assert int(src_l.max()) < gids.shape[0]
+    assert int(dst_l[:64].max()) < 16
+
+
+def test_partitioner_balance_and_cut(medium_static_graph):
+    g = medium_static_graph
+    p = partition_graph(g, n_workers=4, parts_per_type=4)
+    assert p.part_of.shape == (g.n_vertices,)
+    assert p.n_parts == g.n_vertex_types * 4
+    # every partition holds one vertex type only
+    for pid in range(p.n_parts):
+        sel = p.part_of == pid
+        if sel.any():
+            assert len(np.unique(g.v_type[sel])) == 1
+    # round-robin placement load balance
+    per_worker = np.bincount(p.worker_of_part, minlength=4)
+    assert per_worker.max() - per_worker.min() <= 1
+    # topo partitioning should beat hash partitioning on weighted edge cut
+    ph = partition_graph(g, n_workers=4, parts_per_type=4, hash_baseline=True)
+    assert p.stats["edge_cut"] <= ph.stats["edge_cut"]
+
+
+def test_reassign_on_failure(medium_static_graph):
+    g = medium_static_graph
+    p = partition_graph(g, n_workers=4, parts_per_type=2)
+    p2 = reassign_on_failure(p, failed_worker=1)
+    assert not (p2.worker_of_part == 1).any()
+    np.testing.assert_array_equal(p.part_of, p2.part_of)

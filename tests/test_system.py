@@ -1,0 +1,82 @@
+"""End-to-end system tests: GraniteServer over LDBC graphs + planner +
+verification against the oracle (the paper's full pipeline at test scale)."""
+import numpy as np
+import pytest
+
+from repro.core import engine as E
+from repro.core.ref_engine import RefEngine
+from repro.graphdata.ldbc import LdbcParams, generate_ldbc
+from repro.graphdata.queries import make_workload
+from repro.launch.query import GraniteServer
+
+
+@pytest.fixture(scope="module")
+def server(medium_static_graph):
+    return GraniteServer(medium_static_graph, use_planner=True)
+
+
+def test_workload_end_to_end_counts(medium_static_graph, server):
+    ref = RefEngine(medium_static_graph)
+    wl = make_workload(medium_static_graph, n_per_template=2, seed=10)
+    recs = server.run_workload(wl)
+    assert all(r.ok for r in recs)
+    for inst, rec in zip(wl, recs):
+        want = ref.count(inst.qry, mode=E.MODE_STATIC)
+        assert rec.count == want, (inst.template, rec.count, want)
+
+
+def test_workload_completion_within_budget(medium_static_graph, server):
+    wl = make_workload(medium_static_graph, n_per_template=3, seed=11)
+    recs = server.run_workload(wl)
+    assert sum(r.ok for r in recs) == len(recs), "100% completion (paper Tbl 7)"
+    assert all(r.latency_ms < 5000 for r in recs)
+
+
+def test_aggregate_workload(medium_static_graph, server):
+    ref = RefEngine(medium_static_graph)
+    wl = make_workload(medium_static_graph, templates=("Q2", "Q4"),
+                       n_per_template=1, seed=12, aggregate=True)
+    for inst in wl:
+        rec = server.execute(inst)
+        want = ref.aggregate(inst.qry, mode=E.MODE_STATIC)
+        assert rec.ok
+        assert rec.count == sum(want.values())
+
+
+def test_dynamic_graph_end_to_end(small_dynamic_graph):
+    server = GraniteServer(small_dynamic_graph)
+    assert server.mode == E.MODE_BUCKET
+    ref = RefEngine(small_dynamic_graph)
+    wl = make_workload(small_dynamic_graph, templates=("Q8",), n_per_template=3,
+                       seed=13)
+    for inst in wl:
+        rec = server.execute(inst)
+        want = float(np.sum(ref.count(inst.qry, mode=E.MODE_BUCKET, n_buckets=16)))
+        assert rec.ok and rec.count == want
+
+
+def test_planner_vs_fixed_plans_latency(medium_static_graph):
+    """Cost-model-selected plans must not systematically lose to the default
+    left-to-right plan (paper Fig. 8)."""
+    s_planned = GraniteServer(medium_static_graph, use_planner=True)
+    s_default = GraniteServer(medium_static_graph, use_planner=False)
+    wl = make_workload(medium_static_graph, templates=("Q2", "Q7"),
+                       n_per_template=3, seed=14)
+    # min-of-3 to be robust to background load on the shared CPU
+    t_planned = min(np.mean([r.latency_ms for r in s_planned.run_workload(wl)])
+                    for _ in range(3))
+    t_default = min(np.mean([r.latency_ms for r in s_default.run_workload(wl)])
+                    for _ in range(3))
+    r_planned = s_planned.run_workload(wl)
+    r_default = s_default.run_workload(wl)
+    for a, b in zip(r_planned, r_default):
+        assert a.count == b.count, "plans must agree on results"
+    assert t_planned <= t_default * 2.0
+
+
+def test_four_degree_distributions_generate():
+    for dist in ("altmann", "weibull", "facebook", "zipf"):
+        g = generate_ldbc(LdbcParams(n_persons=30, degree_dist=dist, seed=1))
+        assert g.n_edges > 0
+        wl = make_workload(g, templates=("Q2",), n_per_template=1)
+        E.count_results(g, wl[0].qry)  # executes without error

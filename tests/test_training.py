@@ -1,0 +1,111 @@
+"""Optimizer, schedules, train loop, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.compression import (CompressionCfg, compress, decompress,
+                                        init_error_state)
+from repro.training.optimizer import OptCfg, apply_updates, init_state, schedule_lr
+from repro.training.train_loop import make_train_step
+
+
+def test_schedules():
+    for sched in ("const", "cosine", "wsd"):
+        cfg = OptCfg(lr=1e-3, schedule=sched, warmup_steps=10, total_steps=100)
+        lrs = [float(schedule_lr(cfg, jnp.asarray(s))) for s in range(101)]
+        assert lrs[0] < lrs[10] * 0.5, "warmup ramps"
+        assert abs(lrs[10] - 1e-3) < 1e-9
+        if sched == "wsd":
+            assert lrs[50] == pytest.approx(1e-3), "stable plateau"
+            assert lrs[100] < 2e-4, "fast final decay"
+        if sched == "cosine":
+            assert lrs[100] < lrs[50] < lrs[11]
+
+
+def test_adamw_converges_quadratic():
+    cfg = OptCfg(lr=0.1, schedule="const", warmup_steps=0, weight_decay=0.0,
+                 clip_norm=None)
+    params = dict(w=jnp.asarray([5.0, -3.0]))
+    state = init_state(params)
+    for _ in range(300):
+        grads = dict(w=2 * params["w"])
+        params, state, _ = apply_updates(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_train_step_loss_decreases():
+    from repro.configs.minicpm_2b import SMOKE
+    from repro.models import transformer as tr
+
+    params = tr.init_params(SMOKE, jax.random.PRNGKey(0))
+    opt = init_state(params)
+    cfg = OptCfg(lr=3e-3, schedule="const", warmup_steps=0)
+    step = make_train_step(lambda p, b: tr.loss_fn(SMOKE, p, b), cfg, donate=False)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, SMOKE.vocab)
+    batch = dict(tokens=toks, labels=toks)
+    losses = []
+    for _ in range(20):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::5]
+
+
+def test_microbatch_equivalence():
+    from repro.configs.llama3_405b import SMOKE
+    from repro.models import transformer as tr
+
+    params = tr.init_params(SMOKE, jax.random.PRNGKey(0))
+    cfg = OptCfg(lr=1e-3, schedule="const", warmup_steps=0)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, SMOKE.vocab)
+    batch = dict(tokens=toks, labels=toks)
+    s1 = make_train_step(lambda p, b: tr.loss_fn(SMOKE, p, b), cfg, 1, donate=False)
+    s2 = make_train_step(lambda p, b: tr.loss_fn(SMOKE, p, b), cfg, 2, donate=False)
+    p1, _, m1 = s1(params, init_state(params), batch)
+    p2, _, m2 = s2(params, init_state(params), batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-4)
+    d = jax.tree_util.tree_map(lambda a, b: float(jnp.abs(a - b).max()), p1, p2)
+    assert max(jax.tree_util.tree_leaves(d)) < 5e-3
+
+
+@pytest.mark.parametrize("kind", ["int8", "topk"])
+def test_compression_error_feedback(kind):
+    """Error feedback makes repeated compression unbiased: summed decoded
+    gradients converge to summed true gradients."""
+    rng = np.random.default_rng(0)
+    cfg = CompressionCfg(kind=kind, topk_frac=0.2)
+    g_true = dict(w=jnp.asarray(rng.normal(size=(64,)), jnp.float32))
+    err = init_error_state(g_true)
+    total_dec, total_true = jnp.zeros(64), jnp.zeros(64)
+    for _ in range(30):
+        payload, err = compress(cfg, g_true, err)
+        dec = decompress(cfg, payload, g_true)
+        total_dec = total_dec + dec["w"]
+        total_true = total_true + g_true["w"]
+    rel = float(jnp.linalg.norm(total_dec - total_true) /
+                jnp.linalg.norm(total_true))
+    assert rel < 0.1, rel
+
+
+def test_dp_train_step_with_compression_single_axis():
+    """shard_map DP path with compressed psum (axis size 1 on CPU —
+    exercises the full compress/psum/decompress graph)."""
+    from repro.configs.llama3_405b import SMOKE
+    from repro.models import transformer as tr
+    from repro.training.train_loop import make_dp_train_step
+
+    mesh = jax.make_mesh((1,), ("data",))
+    params = tr.init_params(SMOKE, jax.random.PRNGKey(0))
+    opt = init_state(params)
+    err = init_error_state(params)
+    cfg = OptCfg(lr=1e-3, schedule="const", warmup_steps=0)
+    step = make_dp_train_step(lambda p, b: tr.loss_fn(SMOKE, p, b), cfg, mesh,
+                              CompressionCfg(kind="int8"))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, SMOKE.vocab)
+    batch = dict(tokens=toks, labels=toks)
+    with mesh:
+        p2, o2, e2, m = step(params, opt, err, batch)
+    assert np.isfinite(float(m["loss"]))
+    moved = jax.tree_util.tree_map(lambda a, b: float(jnp.abs(a - b).max()),
+                                   params, p2)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
