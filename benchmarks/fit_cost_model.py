@@ -1,7 +1,13 @@
 """Micro-benchmark fit of the cost-model execution-time coefficients
 (paper Table 3 analogue) — writes src/repro/configs/cost_coeffs.json.
 
-Features per measured superstep: [1, V_slice, E_slice, etr·E_slice, m̄].
+Features per measured superstep batch:
+  [1, V_slice, E_slice, etr·E_slice, m̄, m_net]
+where the first five come from dense single-stream runs (m_net = 0) and the
+exchange column m_net comes from MEASURED partitioned supersteps
+(engine_partitioned.measure_supersteps): per-worker compute extents divide by
+the worker count, the boundary-message volume is the partitioner's halo ghost
+count.  The fitted θ_net makes plan selection distribution-aware.
 """
 from __future__ import annotations
 
@@ -10,6 +16,7 @@ import time
 import numpy as np
 
 from repro.core import engine as E
+from repro.core import engine_partitioned as EP
 from repro.core.planner import fit_linear, load_coeffs, save_coeffs
 from repro.core.stats import GraphStats
 from repro.graphdata.ldbc import LdbcParams, generate_ldbc
@@ -18,15 +25,37 @@ from repro.graphdata.queries import make_workload
 from .common import SCALE, emit
 
 
+def _trav_by_type(g):
+    """Traversal arrivals per vertex type (same derivation as Planner)."""
+    deg = g.in_degree.astype(np.int64) + g.out_degree.astype(np.int64)
+    out = np.zeros(g.n_vertex_types, np.int64)
+    np.add.at(out, g.v_type, deg)
+    return out
+
+
+def _step_features(g, qry, trav_by_type, V, E2):
+    """Per-superstep (v_slice, e_slice, etr) extents for a query's hops."""
+    n_steps = qry.n_vertices
+    v_slices, e_slices, etrs = [], [], []
+    for i, vp in enumerate(qry.v_preds):
+        v_slices.append(g.type_counts[vp.vtype] if vp.vtype >= 0 else V)
+        nxt = qry.v_preds[i + 1].vtype if i + 1 < n_steps else -1
+        e_slices.append(trav_by_type[nxt] if nxt >= 0 else E2)
+        etrs.append(1.0 if (i < len(qry.e_preds) and
+                            qry.e_preds[i].etr_op != -1) else 0.0)
+    return np.asarray(v_slices, float), np.asarray(e_slices, float), np.asarray(etrs)
+
+
 def run(write: bool = True):
     sizes = {"ci": (150, 400), "full": (400, 1200)}[SCALE]
+    part_workers = {"ci": (2, 4), "full": (2, 4, 8)}[SCALE]
     rows, times = [], []
+    graphs = []
     for n in sizes:
         g = generate_ldbc(LdbcParams(n_persons=n, degree_dist="facebook", seed=6))
+        graphs.append(g)
         V, E2 = g.n_vertices, 2 * g.n_edges
-        deg = g.in_degree.astype(np.int64) + g.out_degree.astype(np.int64)
-        trav_by_type = np.zeros(g.n_vertex_types, np.int64)
-        np.add.at(trav_by_type, g.v_type, deg)
+        trav_by_type = _trav_by_type(g)
         wl = make_workload(g, n_per_template=3, seed=61)
         for inst in wl:
             qry = inst.qry
@@ -36,33 +65,63 @@ def run(write: bool = True):
                 for _ in range(3):
                     out = E.execute(g, qry, split=split)
                 t = (time.perf_counter() - t0) / 3 * 1e3
-                n_steps = qry.n_vertices
-                # distribute time over supersteps with per-step features
-                v_slices, e_slices, etrs, msgs = [], [], [], []
-                for i, vp in enumerate(qry.v_preds):
-                    v_slices.append(
-                        g.type_counts[vp.vtype] if vp.vtype >= 0 else V)
-                    nxt = qry.v_preds[i + 1].vtype if i + 1 < n_steps else -1
-                    e_slices.append(trav_by_type[nxt] if nxt >= 0 else E2)
-                    etrs.append(1.0 if (i < len(qry.e_preds) and
-                                        qry.e_preds[i].etr_op != -1) else 0.0)
+                v_s, e_s, etrs = _step_features(g, qry, trav_by_type, V, E2)
                 feats = np.asarray([
-                    n_steps,
-                    float(np.sum(v_slices)),
-                    float(np.sum(e_slices[:-1])),
-                    float(np.sum(np.asarray(etrs[:-1]) * np.asarray(e_slices[:-1]))),
-                    float(np.sum(e_slices[:-1])) * 0.05,  # message proxy
+                    qry.n_vertices,
+                    float(np.sum(v_s)),
+                    float(np.sum(e_s[:-1])),
+                    float(np.sum(etrs[:-1] * e_s[:-1])),
+                    float(np.sum(e_s[:-1])) * 0.05,  # message proxy
+                    0.0,                             # no exchange single-stream
                 ])
                 rows.append(feats)
                 times.append(t)
+
+    # ---- partitioned supersteps: measured per-worker makespans + exchange
+    g = graphs[0]
+    V, E2 = g.n_vertices, 2 * g.n_edges
+    trav_by_type = _trav_by_type(g)
+    wl = make_workload(g, templates=("Q1", "Q2", "Q4"), n_per_template=2, seed=62)
+    for w in part_workers:
+        for inst in wl:
+            qry = inst.qry
+            prof = EP.measure_supersteps(g, qry, n_workers=w, repeats=2)
+            t = float(prof.makespan_s.sum()) * 1e3  # ms, straggler per hop
+            v_s, e_s, etrs = _step_features(g, qry, trav_by_type, V, E2)
+            # features must describe what measure_supersteps TIMES: one
+            # dispatch per hop of local compute (edge apply + delivery +
+            # halo gather) — init predicate eval, the final join AND the
+            # ETR rank-prefix step are untimed there, so those columns are
+            # zeroed for these rows.
+            feats = np.asarray([
+                len(qry.e_preds),
+                0.0,
+                float(np.sum(e_s[:-1])) / w,
+                0.0,
+                float(np.sum(e_s[:-1])) * 0.05 / w,
+                float(prof.exchange_msgs.sum()),
+            ])
+            rows.append(feats)
+            times.append(t)
+
     X = np.asarray(rows)
     y = np.asarray(times)
-    theta = fit_linear(X, y)
-    theta = np.maximum(theta, 0.0)  # physical non-negativity
+    # Two-stage fit: the compute coefficients come from the dense rows alone
+    # (same conditioning as the seed fit); θ_net then explains the residual
+    # of the partitioned rows over their compute share — this keeps the two
+    # row populations from fighting over the collinear compute columns.
+    dense_sel = X[:, 5] == 0.0
+    theta_c = np.maximum(fit_linear(X[dense_sel, :5], y[dense_sel]), 0.0)
+    resid = y[~dense_sel] - X[~dense_sel, :5] @ theta_c
+    m_net = X[~dense_sel, 5]
+    theta_net = float(np.maximum(
+        np.dot(m_net, resid) / max(np.dot(m_net, m_net), 1e-9), 0.0))
+    theta = np.concatenate([theta_c, [theta_net]])
     coeffs = dict(
         theta0=float(theta[0]), theta_init=float(theta[1]),
         theta_v=float(theta[1]), theta_e=float(theta[2]),
         theta_etr=float(theta[3]), theta_m=float(theta[4]),
+        theta_net=theta_net,
     )
     pred = X @ theta
     r2 = 1 - np.sum((y - pred) ** 2) / max(np.sum((y - y.mean()) ** 2), 1e-9)

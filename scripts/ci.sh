@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# One-command CI gate: tier-1 tests + engine smoke at CI scale.
+#   ./scripts/ci.sh            # full gate
+#   ./scripts/ci.sh --fast     # tests only (skip the smoke oracle sweep)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export BENCH_SCALE="${BENCH_SCALE:-ci}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== smoke: engine vs oracle (all modes/splits) =="
+  python scripts/smoke_engine.py
+fi
+
+echo "CI GATE PASSED"

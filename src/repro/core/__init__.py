@@ -1,8 +1,25 @@
 """Granite-JAX core: the paper's primary contribution.
 
 Temporal property graph model, temporal path query model (ETR + temporal
-aggregation), the distributed superstep execution engine, split-point query
-plans, graph statistics and the cost-model planner.
+aggregation), the superstep execution engines, split-point query plans,
+graph statistics and the distribution-aware cost-model planner.
+
+Engine stack (three executors over one superstep core):
+
+  superstep.py           hop primitives: predicate eval, edge masking, ETR
+                         rank application, segment-sum delivery, state
+                         algebra, interval/bucket joins
+  engine.py              DENSE executor + the split/join plan skeleton all
+                         executors share (``execute`` routes dense/sliced)
+  engine_sliced.py       SLICED executor — typed-slice extents per hop
+  engine_partitioned.py  PARTITIONED executor — per-worker shards from the
+                         two-level partitioner, local segment-sum delivery,
+                         boundary-halo exchange each superstep; vmap on one
+                         device, shard_map over a device mesh on several
+
+All three produce bit-identical results; the planner (planner.py) picks
+split-point plans, adding a θ_net cross-partition exchange term when given a
+partitioning.
 """
 from . import intervals, query
 from .engine import MODE_BUCKET, MODE_INTERVAL, MODE_STATIC, count_results, execute

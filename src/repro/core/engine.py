@@ -1,4 +1,4 @@
-"""Granite-JAX distributed temporal path-query engine (Sec. 4 of the paper).
+"""Granite-JAX temporal path-query engine — dense executor + plan skeleton.
 
 Execution model
 ---------------
@@ -24,12 +24,27 @@ messages).  Three temporal modes:
 
 ETR (edge temporal relationship) hops use precomputed rank tables + segment
 prefix sums (see graph.EtrTables): exact, O(E) per hop, no ragged state.
+
+Three-layer architecture
+------------------------
+The hop primitives (predicate eval, edge masking, ETR rank application,
+segment-sum delivery, state algebra, joins) live in ``superstep.py``; this
+module adds the DENSE executor (``run_segment``) plus the split-point plan
+skeleton (``execute_plan_traced``) that all executors share via the
+``segment_runner`` hook:
+
+  superstep core ──┬── engine.py              dense, whole-graph supersteps
+                   ├── engine_sliced.py       type-slice extents per hop
+                   └── engine_partitioned.py  per-worker shards + boundary
+                                              exchange (distributed path)
+
+``execute()`` routes between dense/sliced; ``engine_partitioned.execute()``
+is the partition-sharded entry point with identical semantics.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,276 +52,20 @@ import numpy as np
 
 from . import intervals as iv
 from . import query as Q
+from . import superstep as SS
 from .graph import TemporalGraph
+from .superstep import MODE_BUCKET, MODE_INTERVAL, MODE_STATIC
 
-MODE_STATIC = 0
-MODE_BUCKET = 1
-MODE_INTERVAL = 2
-
-_NEG = -(2 ** 30)
-
-# ETR term kinds (rank-array rows in graph.EtrTables):
-#   0: #(acc.start <  cur.start)     1: #(acc.start <= cur.start)
-#   2: #(acc.start <  cur.end)       3: #(acc.end   <= cur.start)
-# spec: (alpha, ((sign, term), ...)) st. result = alpha * n_acc + Σ sign * P[term]
-_ETR_SPECS = {
-    (iv.FULLY_BEFORE, False): (0.0, ((1.0, 3),)),
-    (iv.STARTS_BEFORE, False): (0.0, ((1.0, 0),)),
-    (iv.FULLY_AFTER, False): (1.0, ((-1.0, 2),)),
-    (iv.STARTS_AFTER, False): (1.0, ((-1.0, 1),)),
-    (iv.OVERLAPS, False): (0.0, ((1.0, 2), (-1.0, 3))),
-    (iv.FULLY_BEFORE, True): (1.0, ((-1.0, 2),)),
-    (iv.STARTS_BEFORE, True): (1.0, ((-1.0, 1),)),
-    (iv.FULLY_AFTER, True): (0.0, ((1.0, 3),)),
-    (iv.STARTS_AFTER, True): (0.0, ((1.0, 0),)),
-    (iv.OVERLAPS, True): (0.0, ((1.0, 2), (-1.0, 3))),
-}
+# Back-compat aliases for primitives that moved to superstep.py, kept only
+# for the external users that still reach them through this module
+# (benchmarks/components.py).  New code should import from superstep.
+_TRACE_BEDGES = SS.TRACE_BEDGES  # same list object — push/pop still scopes
+_eval_predicate = SS.eval_predicate
+_etr_weighted = SS.etr_weighted
 
 
 # =========================================================================
-# clause evaluation
-# =========================================================================
-def _empty_interval(n):
-    return jnp.zeros((n, 2), jnp.int32)
-
-
-def _eval_prop_clause(col, value, cmp: int, mode: int, bedges, ent_life):
-    """Evaluate one property clause over an entity set.
-
-    Returns (match bool[N], validity) where validity is a bucket mask [N,B]
-    (MODE_BUCKET), an interval int32[N,2] (MODE_INTERVAL), or None.
-    """
-    vals, life = col  # [N,S], [N,S,2]
-    slot_eq = vals == value
-    has_any = jnp.any(vals >= 0, axis=1)
-    if cmp == Q.P_NEQ:
-        match = has_any & ~jnp.any(slot_eq, axis=1)
-        if mode == MODE_BUCKET:
-            return match, iv.interval_to_bucket_mask(ent_life, bedges)
-        if mode == MODE_INTERVAL:
-            return match, ent_life
-        return match, None
-    # EQ / CONTAINS: any slot equal
-    match = jnp.any(slot_eq, axis=1)
-    if mode == MODE_BUCKET:
-        slot_masks = iv.interval_to_bucket_mask(life, bedges)  # [N,S,B]
-        valid = jnp.any(slot_masks & slot_eq[..., None], axis=1)
-        return match, valid
-    if mode == MODE_INTERVAL:
-        idx = jnp.argmax(slot_eq, axis=1)
-        sel = jnp.take_along_axis(life, idx[:, None, None], axis=1)[:, 0]  # [N,2]
-        valid = jnp.where(match[:, None], sel, 0)
-        return match, valid
-    return match, None
-
-
-def _eval_time_clause(ent_life, cmp_id: int, interval, mode: int, bedges):
-    const_iv = jnp.broadcast_to(jnp.asarray(interval, jnp.int32), ent_life.shape)
-    match = iv.compare(cmp_id, ent_life, const_iv)
-    if mode == MODE_BUCKET:
-        return match, iv.interval_to_bucket_mask(ent_life, bedges)
-    if mode == MODE_INTERVAL:
-        return match, ent_life
-    return match, None
-
-
-def _fold_clauses(parts, mode):
-    """AND/OR left-fold of (conj, match, validity) triples."""
-    acc_m, acc_v = None, None
-    for conj, m, v in parts:
-        if acc_m is None:
-            acc_m, acc_v = m, v
-            continue
-        if conj == Q.AND:
-            acc_m = acc_m & m
-            if mode == MODE_BUCKET:
-                acc_v = acc_v & v
-            elif mode == MODE_INTERVAL:
-                acc_v = iv.intersect(acc_v, v)
-        else:  # OR
-            new_m = acc_m | m
-            if mode == MODE_BUCKET:
-                acc_v = (acc_v & acc_m[:, None]) | (v & m[:, None])
-            elif mode == MODE_INTERVAL:
-                # span approximation for OR in interval mode (documented)
-                acc_v = jnp.where(
-                    (acc_m & ~m)[:, None], acc_v,
-                    jnp.where((m & ~acc_m)[:, None], v, iv.span(acc_v, v)),
-                )
-            acc_m = new_m
-    return acc_m, acc_v
-
-
-def _eval_predicate(
-    props: Dict[int, tuple],
-    ent_type,
-    ent_life,
-    req_type: int,
-    clauses: Sequence[Q.Clause],
-    params,
-    pbase: int,
-    mode: int,
-    bedges,
-):
-    """Full predicate = type check ∧ folded clauses; returns (match, validity).
-
-    ``params`` carries the data values: row i = (value, t_lo, t_hi) for the
-    i-th clause of the whole query; ``pbase`` is this predicate's first row.
-    """
-    n = ent_life.shape[0]
-    match = jnp.ones((n,), bool)
-    if req_type >= 0:
-        match = ent_type == req_type
-    match = match & (ent_life[:, 0] < ent_life[:, 1])
-    if mode == MODE_BUCKET:
-        validity = iv.interval_to_bucket_mask(ent_life, bedges)
-    elif mode == MODE_INTERVAL:
-        validity = ent_life
-    else:
-        validity = None
-    parts = []
-    for i, c in enumerate(clauses):
-        row = params[pbase + i]
-        if c.kind == Q.K_PROP:
-            col = props[c.key]
-            m, v = _eval_prop_clause(col, row[0], c.cmp, mode, bedges, ent_life)
-        else:
-            m, v = _eval_time_clause(ent_life, c.cmp, row[1:3], mode, bedges)
-        parts.append((c.conj, m, v))
-    if parts:
-        cm, cv = _fold_clauses(parts, mode)
-        match = match & cm
-        if mode == MODE_BUCKET:
-            validity = validity & cv
-        elif mode == MODE_INTERVAL:
-            validity = iv.intersect(validity, cv)
-    return match, validity
-
-
-# =========================================================================
-# mode-generic state ops
-# =========================================================================
-def _init_state(match, validity, mode: int, n_buckets: int):
-    """Seed DP state from a vertex predicate result."""
-    if mode == MODE_STATIC:
-        return match.astype(jnp.float32)
-    if mode == MODE_BUCKET:
-        return (match[:, None] & validity).astype(jnp.float32)
-    # INTERVAL: one-hot cell at (start_bucket, end_bucket); cells [B, B+1]
-    B = n_buckets
-    sb, eb = _interval_to_cells(validity, B)
-    cell = (
-        jax.nn.one_hot(sb, B, dtype=jnp.float32)[:, :, None]
-        * jax.nn.one_hot(eb, B + 1, dtype=jnp.float32)[:, None, :]
-    )
-    return cell * match[:, None, None].astype(jnp.float32)
-
-
-def _interval_to_cells(ivl, B):
-    """Map int32[N,2] intervals to (start_bucket, end_bucket) cell ids."""
-    # bedges are closed over by caller via _CELL_EDGES; passed through globals
-    # of the trace — instead we normalise intervals to bucket ids here using
-    # the bedges captured by _set_bucket_edges (thread-local per trace).
-    bedges = _TRACE_BEDGES[-1]
-    sb = jnp.clip(jnp.searchsorted(bedges, ivl[:, 0], side="right") - 1, 0, B - 1)
-    eb = jnp.clip(jnp.searchsorted(bedges, ivl[:, 1], side="left"), 0, B)
-    empty = ivl[:, 0] >= ivl[:, 1]
-    eb = jnp.where(empty, sb, eb)  # empty → zero-width cell (filtered later)
-    return sb, eb
-
-
-_TRACE_BEDGES: List = []
-
-
-def _apply_validity(state, match, validity, mode: int):
-    """Multiply state by a predicate's (match, validity) at its entity."""
-    if mode == MODE_STATIC:
-        return state * match.astype(jnp.float32)
-    if mode == MODE_BUCKET:
-        return state * (match[:, None] & validity).astype(jnp.float32)
-    # INTERVAL: clamp running-intersection cells by the validity interval
-    B = state.shape[-2]
-    sb, eb = _interval_to_cells(validity, B)
-    out = _clamp_start(state, sb)
-    out = _clamp_end(out, eb)
-    out = out * match[..., None, None].astype(jnp.float32)
-    return _mask_valid_cells(out)
-
-
-def _clamp_start(state, ps):
-    """cells[n, s, e] move to (max(s, ps[n]), e)."""
-    B = state.shape[-2]
-    cum = jnp.cumsum(state, axis=-2)
-    keep = (jnp.arange(B)[None, :] > ps[:, None]).astype(state.dtype)
-    cum_at = jnp.take_along_axis(cum, ps[:, None, None], axis=-2)[:, 0, :]
-    onehot = jax.nn.one_hot(ps, B, dtype=state.dtype)
-    return state * keep[:, :, None] + onehot[:, :, None] * cum_at[:, None, :]
-
-
-def _clamp_end(state, pe):
-    """cells[n, s, e] move to (s, min(e, pe[n]))."""
-    Bp1 = state.shape[-1]
-    rcum = jnp.cumsum(state[..., ::-1], axis=-1)[..., ::-1]
-    keep = (jnp.arange(Bp1)[None, :] < pe[:, None]).astype(state.dtype)
-    cum_at = jnp.take_along_axis(rcum, pe[:, None, None], axis=-1)[:, :, 0]
-    onehot = jax.nn.one_hot(pe, Bp1, dtype=state.dtype)
-    return state * keep[:, None, :] + onehot[:, None, :] * cum_at[:, :, None]
-
-
-def _mask_valid_cells(state):
-    B, Bp1 = state.shape[-2], state.shape[-1]
-    s_ids = jnp.arange(B)[:, None]
-    e_ids = jnp.arange(Bp1)[None, :]
-    return state * (s_ids < e_ids).astype(state.dtype)
-
-
-def _state_total(state, mode):
-    if mode == MODE_STATIC:
-        return jnp.sum(state)
-    if mode == MODE_BUCKET:
-        return jnp.sum(state, axis=0)  # per-bucket totals
-    return jnp.sum(_mask_valid_cells(state))
-
-
-# =========================================================================
-# ETR prefix machinery
-# =========================================================================
-def _etr_weighted(gdev, cnt_e_prev, op: int, backward: bool, use_arr: bool):
-    """Per current traversal edge: Σ over accumulated arrivals at its vertex
-    of cnt × [ETR condition], via rank tables (exact)."""
-    alpha, terms = _ETR_SPECS[(op, backward)]
-    perm_s = gdev["etr_perm_start"]
-    perm_e = gdev["etr_perm_end"]
-    ranks = gdev["etr_arr_ranks"] if use_arr else gdev["etr_dep_ranks"]
-    ptr = gdev["arr_ptr"]
-    segv = gdev["t_dst"] if use_arr else gdev["t_src"]
-
-    trailing = cnt_e_prev.shape[1:]
-    zero = jnp.zeros((1,) + trailing, cnt_e_prev.dtype)
-
-    S_s = jnp.concatenate([zero, jnp.cumsum(cnt_e_prev[perm_s], axis=0)], axis=0)
-    need_end = any(t == 3 for _, t in terms)
-    S_e = (
-        jnp.concatenate([zero, jnp.cumsum(cnt_e_prev[perm_e], axis=0)], axis=0)
-        if need_end
-        else None
-    )
-    base_pos = ptr[segv]
-    base_s = S_s[base_pos]
-    out = 0.0
-    if alpha:
-        n_acc = S_s[ptr[segv + 1]] - base_s
-        out = alpha * n_acc
-    for sign, term in terms:
-        S = S_e if term == 3 else S_s
-        base = (S_e[base_pos] if term == 3 else base_s)
-        val = S[base_pos + ranks[term]] - base
-        out = out + sign * val
-    return out
-
-
-# =========================================================================
-# segment execution
+# segment execution (dense)
 # =========================================================================
 @dataclasses.dataclass
 class SegmentResult:
@@ -318,18 +77,7 @@ class SegmentResult:
 
 def _edge_predicate_weights(gdev, ep: Q.EdgePredicate, params, pbase, mode, bedges):
     """(weight f32[2E], bucket validity or interval validity) for a hop."""
-    t_life = gdev["t_life"]
-    match, validity = _eval_predicate(
-        gdev["eprops_t"], gdev["t_type"], t_life, ep.etype, ep.clauses,
-        params, pbase, mode, bedges,
-    )
-    if ep.direction == Q.DIR_OUT:
-        dmask = gdev["t_isfwd"] == 1
-    elif ep.direction == Q.DIR_IN:
-        dmask = gdev["t_isfwd"] == 0
-    else:
-        dmask = jnp.ones_like(gdev["t_isfwd"], bool)
-    return (match & dmask), validity
+    return SS.edge_predicate_weights(gdev, ep, params, pbase, mode, bedges)
 
 
 def run_segment(
@@ -353,14 +101,14 @@ def run_segment(
     """
     V = gdev["v_life"].shape[0]
     stats: List[dict] = []
-    bedges = _TRACE_BEDGES[-1] if _TRACE_BEDGES else None
+    bedges = SS.current_bedges()
 
     # ---- init superstep (first vertex predicate)
-    vm, vv = _eval_predicate(
+    vm, vv = SS.eval_predicate(
         gdev["vprops"], gdev["v_type"], gdev["v_life"], v_preds[0].vtype,
         v_preds[0].clauses, params, pbases_v[0], mode, bedges,
     )
-    state_v = _init_state(vm, vv, mode, n_buckets)
+    state_v = SS.init_state(vm, vv, mode, n_buckets)
     stats.append(dict(phase="init", matched=jnp.sum(vm)))
 
     mch_v = None
@@ -375,44 +123,37 @@ def run_segment(
     arrivals_v = None
     prev_raw_e = None
     for i, ep in enumerate(e_preds):
-        wmask, evalidity = _edge_predicate_weights(
+        wmask, evalidity = SS.edge_predicate_weights(
             gdev, ep, params, pbases_e[i], mode, bedges
         )
         if i > 0:
             # apply the intermediate vertex predicate (post-arrival)
-            vm, vv = _eval_predicate(
+            vm, vv = SS.eval_predicate(
                 gdev["vprops"], gdev["v_type"], gdev["v_life"], v_preds[i].vtype,
                 v_preds[i].clauses, params, pbases_v[i], mode, bedges,
             )
         if ep.etr_op != -1:
             # ETR hop: prefix-sum over *raw* previous arrivals, then apply the
             # intermediate vertex predicate at the source gather.
-            src_cnt = _etr_weighted(gdev, prev_raw_e, ep.etr_op, backward, use_arr=False)
+            src_cnt = SS.etr_weighted(gdev, prev_raw_e, ep.etr_op, backward,
+                                      use_arr=False)
             src_match = vm[gdev["t_src"]]
             if mode == MODE_STATIC:
                 src_val = src_cnt * src_match.astype(jnp.float32)
             elif mode == MODE_BUCKET:
                 src_val = src_cnt * (vm[:, None] & vv)[gdev["t_src"]].astype(jnp.float32)
             else:
-                src_val = _apply_validity(src_cnt, vm[gdev["t_src"]],
-                                          vv[gdev["t_src"]], mode)
+                src_val = SS.apply_validity(src_cnt, vm[gdev["t_src"]],
+                                            vv[gdev["t_src"]], mode)
         else:
             if i == 0:
                 sv = state_v
             else:
-                sv = _apply_validity(arrivals_v, vm, vv, mode)
+                sv = SS.apply_validity(arrivals_v, vm, vv, mode)
             src_val = sv[gdev["t_src"]]
-        # edge application
-        if mode == MODE_STATIC:
-            cnt_e = src_val * wmask.astype(jnp.float32)
-        elif mode == MODE_BUCKET:
-            cnt_e = src_val * (wmask[:, None] & evalidity).astype(jnp.float32)
-        else:
-            cnt_e = _apply_validity(src_val, wmask, evalidity, mode)
+        cnt_e = SS.apply_edge(src_val, wmask, evalidity, mode)
         arrivals_e = cnt_e
-        arrivals_v = jax.ops.segment_sum(
-            cnt_e, gdev["t_dst"], num_segments=V, indices_are_sorted=True
-        )
+        arrivals_v = SS.deliver(cnt_e, gdev["t_dst"], V)
         prev_raw_e = cnt_e
         if with_minmax:
             if ep.etr_op != -1:
@@ -448,28 +189,6 @@ class ExecOutput:
     stats: List[dict]
 
 
-def _join_interval_counts(L, R):
-    """Distinct-path count from left/right running-intersection cell states.
-
-    D = Σ_v Σ_{cells} L·R·[intervals overlap]; computed via the complement
-    (total − disjoint) with cumsum contractions — O(V·B²).
-    L, R: [V, B, B+1].
-    """
-    totL = L.sum(axis=(1, 2))
-    totR = R.sum(axis=(1, 2))
-    Le = L.sum(axis=1)      # [V, B+1] marginal over start
-    Ls = L.sum(axis=2)      # [V, B]   marginal over end
-    Re = R.sum(axis=1)
-    Rs = R.sum(axis=2)
-    # pairs with L.end <= R.start  (cells: e1 <= s2)
-    cumLe = jnp.cumsum(Le, axis=1)  # Σ_{e1 <= x}
-    d1 = jnp.einsum("vb,vb->v", Rs, cumLe[:, : Rs.shape[1]])
-    # pairs with R.end <= L.start
-    cumRe = jnp.cumsum(Re, axis=1)
-    d2 = jnp.einsum("vb,vb->v", Ls, cumRe[:, : Ls.shape[1]])
-    return totL * totR - d1 - d2
-
-
 def execute_plan_traced(
     gdev: dict,
     qry: Q.PathQuery,
@@ -478,13 +197,17 @@ def execute_plan_traced(
     n_buckets: int,
     params,
     bedges,
+    segment_runner=None,
 ):
-    """Traceable plan execution.  All query structure is Python-static."""
-    _TRACE_BEDGES.append(bedges)
-    try:
-        return _execute_plan_inner(gdev, qry, split, mode, n_buckets, params)
-    finally:
-        _TRACE_BEDGES.pop()
+    """Traceable plan execution.  All query structure is Python-static.
+
+    ``segment_runner`` (defaults to the dense ``run_segment``) lets other
+    executors reuse the split/join skeleton: it must return a SegmentResult
+    whose arrivals live in GLOBAL vertex/traversal-edge space.
+    """
+    with SS.bucket_scope(bedges):
+        return _execute_plan_inner(gdev, qry, split, mode, n_buckets, params,
+                                   segment_runner)
 
 
 def _pbases(qry: Q.PathQuery):
@@ -500,12 +223,16 @@ def _pbases(qry: Q.PathQuery):
     return pv, pe
 
 
-def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params):
-    V = gdev["v_life"].shape[0]
+def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params,
+                        segment_runner=None):
     n = qry.n_vertices
     assert 0 <= split < n
     pv, pe = _pbases(qry)
-    bedges = _TRACE_BEDGES[-1]
+    bedges = SS.current_bedges()
+    runner = segment_runner
+    if runner is None:
+        def runner(*a, **kw):
+            return run_segment(gdev, *a, **kw)
 
     want_agg = qry.agg_op != Q.AGG_NONE
     want_minmax = qry.agg_op in (Q.AGG_MIN, Q.AGG_MAX)
@@ -517,8 +244,8 @@ def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params):
     # ---- left segment: v0 .. v_split (forward)
     left = None
     if split > 0:
-        left = run_segment(
-            gdev, qry.v_preds[: split + 1], qry.e_preds[:split], params,
+        left = runner(
+            qry.v_preds[: split + 1], qry.e_preds[:split], params,
             pv[: split + 1], pe[:split], mode, n_buckets, backward=False,
         )
 
@@ -526,13 +253,12 @@ def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params):
     right = None
     n_right_hops = (n - 1) - split
     if n_right_hops > 0:
-        rpv, rpe = _pbases(rev)  # offsets are against rev's own clause order —
-        # but params rows were packed for the ORIGINAL query; map them:
+        # params rows were packed for the ORIGINAL query; map them:
         # rev.v_preds[i] == qry.v_preds[n-1-i]; rev.e_preds[j] == qry.e_preds[n-2-j]
         rpv_orig = [pv[n - 1 - i] for i in range(n)]
         rpe_orig = [pe[n - 2 - j] for j in range(n - 1)]
-        right = run_segment(
-            gdev, rev.v_preds[: n_right_hops + 1], rev.e_preds[:n_right_hops],
+        right = runner(
+            rev.v_preds[: n_right_hops + 1], rev.e_preds[:n_right_hops],
             params, rpv_orig[: n_right_hops + 1], rpe_orig[:n_right_hops],
             mode, n_buckets, backward=True,
             with_minmax=want_minmax,
@@ -543,26 +269,26 @@ def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params):
     stats = (left.stats if left else []) + (right.stats if right else [])
 
     # ---- join at v_split
-    vm, vv = _eval_predicate(
+    vm, vv = SS.eval_predicate(
         gdev["vprops"], gdev["v_type"], gdev["v_life"], qry.v_preds[split].vtype,
         qry.v_preds[split].clauses, params, pv[split], mode, bedges,
     )
     etr_at_join = split > 0 and split < n - 1 and qry.e_preds[split].etr_op != -1
 
     def vertex_apply(av):
-        return _apply_validity(av, vm, vv, mode)
+        return SS.apply_validity(av, vm, vv, mode)
 
     if n == 1:  # degenerate single-vertex query
-        st = _init_state(vm, vv, mode, n_buckets)
-        total = _state_total(st, mode)
+        st = SS.init_state(vm, vv, mode, n_buckets)
+        total = SS.state_total(st, mode)
         return ExecOutput(total, st if want_agg else None, None, stats)
 
     if not etr_at_join:
         if left is None:
             Rv = vertex_apply(right.arrivals_v)
             if want_agg:
-                per_vertex = Rv if mode != MODE_INTERVAL else _cells_to_buckets(Rv)
-                total = _state_total(Rv, mode)
+                per_vertex = Rv if mode != MODE_INTERVAL else SS.cells_to_buckets(Rv)
+                total = SS.state_total(Rv, mode)
                 mm = None
                 if want_minmax:
                     alive = (Rv if mode == MODE_STATIC else Rv.sum(
@@ -570,11 +296,11 @@ def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params):
                     bad = jnp.float32(np.inf if qry.agg_op == Q.AGG_MIN else -np.inf)
                     mm = jnp.where(alive, right.minmax_v, bad)
                 return ExecOutput(total, per_vertex, mm, stats)
-            total = _state_total(Rv, mode)
+            total = SS.state_total(Rv, mode)
             return ExecOutput(total, None, None, stats)
         if right is None:
             Lv = vertex_apply(left.arrivals_v)
-            return ExecOutput(_state_total(Lv, mode), None, None, stats)
+            return ExecOutput(SS.state_total(Lv, mode), None, None, stats)
         # both sides present, plain product join
         Lv = vertex_apply(left.arrivals_v)
         Rv = right.arrivals_v
@@ -583,12 +309,12 @@ def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params):
         elif mode == MODE_BUCKET:
             total = jnp.sum(Lv * Rv, axis=0)
         else:
-            total = jnp.sum(_join_interval_counts(Lv, Rv))
+            total = jnp.sum(SS.join_interval_counts(Lv, Rv))
         return ExecOutput(total, None, None, stats)
 
     # ---- ETR-at-join: weight right final edges by left arrivals via ranks
     op = qry.e_preds[split].etr_op
-    W = _etr_weighted(gdev, left.arrivals_e, op, backward=False, use_arr=True)
+    W = SS.etr_weighted(gdev, left.arrivals_e, op, backward=False, use_arr=True)
     # apply v_split predicate at the join vertex of each right edge
     if mode == MODE_STATIC:
         w_v = vm[gdev["t_dst"]].astype(jnp.float32)
@@ -597,36 +323,9 @@ def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params):
         mk = (vm[:, None] & vv).astype(jnp.float32)[gdev["t_dst"]]
         total = jnp.sum(W * right.arrivals_e * mk, axis=0)
     else:
-        Wc = _apply_validity(W, vm[gdev["t_dst"]], vv[gdev["t_dst"]], mode)
-        total = jnp.sum(_join_interval_counts_edges(Wc, right.arrivals_e))
+        Wc = SS.apply_validity(W, vm[gdev["t_dst"]], vv[gdev["t_dst"]], mode)
+        total = jnp.sum(SS.join_interval_counts_edges(Wc, right.arrivals_e))
     return ExecOutput(total, None, None, stats)
-
-
-def _cells_to_buckets(state):
-    """[N,B,B+1] running-interval cells → [N,B] per-bucket time series."""
-    B = state.shape[-2]
-    out = []
-    s_ids = jnp.arange(B)[:, None]
-    e_ids = jnp.arange(B + 1)[None, :]
-    for b in range(B):
-        m = ((s_ids <= b) & (e_ids > b)).astype(state.dtype)
-        out.append(jnp.sum(state * m, axis=(-2, -1)))
-    return jnp.stack(out, axis=-1)
-
-
-def _join_interval_counts_edges(L, R):
-    """Distinct-count join at edge granularity (ETR-at-join, interval mode)."""
-    totL = L.sum(axis=(1, 2))
-    totR = R.sum(axis=(1, 2))
-    Le = L.sum(axis=1)
-    Ls = L.sum(axis=2)
-    Re = R.sum(axis=1)
-    Rs = R.sum(axis=2)
-    cumLe = jnp.cumsum(Le, axis=1)
-    d1 = jnp.einsum("eb,eb->e", Rs, cumLe[:, : Rs.shape[1]])
-    cumRe = jnp.cumsum(Re, axis=1)
-    d2 = jnp.einsum("eb,eb->e", Ls, cumRe[:, : Ls.shape[1]])
-    return totL * totR - d1 - d2
 
 
 # =========================================================================
@@ -660,7 +359,8 @@ def execute(
 
     split=None defaults to left-to-right (split = n-1) for plain queries and
     right-to-left (split = 0) for aggregates.  ``sliced`` selects the
-    type-sliced optimised path (engine_sliced.py); None = auto.
+    type-sliced optimised path (engine_sliced.py); None = auto.  For the
+    partition-sharded distributed path use ``engine_partitioned.execute``.
     """
     if split is None:
         split = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1

@@ -14,6 +14,10 @@ the cost model's extent terms (planner.py) measure.
 
 Requires: every vertex predicate carries a type (the LDBC workload does).
 Falls back to the dense engine otherwise (engine.execute handles routing).
+
+Layering: this is the SLICED executor of the three-layer stack (superstep
+core → dense / sliced / partitioned executors); all hop primitives come from
+``superstep.py`` — only the slice bookkeeping lives here.
 """
 from __future__ import annotations
 
@@ -25,11 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import query as Q
-from .engine import (_ETR_SPECS, _apply_validity, _eval_predicate, _init_state,
-                     _join_interval_counts_edges, _pbases, _state_total,
-                     _TRACE_BEDGES, ExecOutput, MODE_BUCKET, MODE_INTERVAL,
-                     MODE_STATIC)
+from . import superstep as SS
+from .engine import ExecOutput, _pbases
 from .graph import TemporalGraph
+from .superstep import MODE_BUCKET, MODE_INTERVAL, MODE_STATIC
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +57,7 @@ def _vslice(arr, lo, hi):
 def _vertex_eval_sliced(gdev, vp, params, pbase, mode, bedges, vb):
     lo, hi = vb
     props = {k: (v[0][lo:hi], v[1][lo:hi]) for k, v in gdev["vprops"].items()}
-    return _eval_predicate(
+    return SS.eval_predicate(
         props, gdev["v_type"][lo:hi], gdev["v_life"][lo:hi], vp.vtype,
         vp.clauses, params, pbase, mode, bedges,
     )
@@ -64,7 +67,7 @@ def _edge_eval_sliced(gdev, ep, params, pbase, mode, bedges, eb):
     lo, hi = eb
     eprops = {k: (v[0][lo:hi], v[1][lo:hi]) for k, v in gdev["eprops_t"].items()}
     t_life = gdev["t_life"][lo:hi]
-    match, validity = _eval_predicate(
+    match, validity = SS.eval_predicate(
         eprops, gdev["t_type"][lo:hi], t_life, ep.etype, ep.clauses,
         params, pbase, mode, bedges,
     )
@@ -82,7 +85,7 @@ def _etr_weighted_sliced(gdev, cnt_prev, op, backward, use_arr,
                          prev_eb, cur_eb, prev_vb):
     """ETR prefix over the previous arrival slice, gathered for the current
     slice's edges.  cnt_prev lives on [prev_eb), ranks are slice-invariant."""
-    alpha, terms = _ETR_SPECS[(op, backward)]
+    alpha, terms = SS.ETR_SPECS[(op, backward)]
     plo, phi = prev_eb
     clo, chi = cur_eb
     vlo, _ = prev_vb
@@ -128,10 +131,10 @@ class _SegResult:
 
 def _run_segment_sliced(gdev, v_preds, e_preds, params, pv, pe, mode,
                         n_buckets, backward, sb: SliceBounds):
-    bedges = _TRACE_BEDGES[-1] if _TRACE_BEDGES else None
+    bedges = SS.current_bedges()
     vb0 = sb.v[v_preds[0].vtype]
     vm, vv = _vertex_eval_sliced(gdev, v_preds[0], params, pv[0], mode, bedges, vb0)
-    state_v = _init_state(vm, vv, mode, n_buckets)   # on slice of type σ0
+    state_v = SS.init_state(vm, vv, mode, n_buckets)   # on slice of type σ0
 
     arrivals_e = None
     arrivals_v = None
@@ -160,13 +163,13 @@ def _run_segment_sliced(gdev, v_preds, e_preds, params, pv, pe, mode,
                 mk = (vm[:, None] & vv)
                 src_val = src_cnt * (mk[src_local] & src_in[:, None]).astype(jnp.float32)
             else:
-                src_val = _apply_validity(src_cnt, vm[src_local] & src_in,
+                src_val = SS.apply_validity(src_cnt, vm[src_local] & src_in,
                                           vv[src_local], mode)
         else:
             if i == 0:
                 sv = state_v
             else:
-                sv = _apply_validity(arrivals_v, vm, vv, mode)
+                sv = SS.apply_validity(arrivals_v, vm, vv, mode)
             gathered = sv[src_local]
             m = src_in
             for _ in sv.shape[1:]:
@@ -177,7 +180,7 @@ def _run_segment_sliced(gdev, v_preds, e_preds, params, pv, pe, mode,
         elif mode == MODE_BUCKET:
             cnt_e = src_val * (wmask[:, None] & evalid).astype(jnp.float32)
         else:
-            cnt_e = _apply_validity(src_val, wmask, evalid, mode)
+            cnt_e = SS.apply_validity(src_val, wmask, evalid, mode)
         nvlo, nvhi = nxt_vb
         seg = gdev["t_dst"][lo:hi] - nvlo
         arrivals_v = jax.ops.segment_sum(cnt_e, seg, num_segments=nvhi - nvlo,
@@ -193,11 +196,8 @@ def _run_segment_sliced(gdev, v_preds, e_preds, params, pv, pe, mode,
 def execute_plan_sliced(gdev, qry: Q.PathQuery, split: int, mode: int,
                         n_buckets: int, params, bedges, sb: SliceBounds):
     """Sliced twin of engine._execute_plan_inner (counts + count-aggregates)."""
-    _TRACE_BEDGES.append(bedges)
-    try:
+    with SS.bucket_scope(bedges):
         return _inner(gdev, qry, split, mode, n_buckets, params, sb)
-    finally:
-        _TRACE_BEDGES.pop()
 
 
 def _zero_output(qry, mode, n_buckets, sb, want_agg):
@@ -218,7 +218,7 @@ def _zero_output(qry, mode, n_buckets, sb, want_agg):
 def _inner(gdev, qry, split, mode, n_buckets, params, sb):
     n = qry.n_vertices
     pv, pe = _pbases(qry)
-    bedges = _TRACE_BEDGES[-1]
+    bedges = SS.current_bedges()
     want_agg = qry.agg_op != Q.AGG_NONE
     if any(sb.v[v.vtype][1] <= sb.v[v.vtype][0] for v in qry.v_preds):
         return _zero_output(qry, mode, n_buckets, sb, want_agg)
@@ -254,23 +254,23 @@ def _inner(gdev, qry, split, mode, n_buckets, params, sb):
     etr_at_join = 0 < split < n - 1 and qry.e_preds[split].etr_op != -1
 
     def vapply(av):
-        return _apply_validity(av, vm, vv, mode)
+        return SS.apply_validity(av, vm, vv, mode)
 
     if n == 1:
-        st = _init_state(vm, vv, mode, n_buckets)
-        return ExecOutput(_state_total(st, mode), st if want_agg else None,
+        st = SS.init_state(vm, vv, mode, n_buckets)
+        return ExecOutput(SS.state_total(st, mode), st if want_agg else None,
                           None, [])
 
     if not etr_at_join:
         if left is None:
             Rv = vapply(right.arrivals_v)
             if want_agg:
-                total = _state_total(Rv, mode)
+                total = SS.state_total(Rv, mode)
                 return ExecOutput(total, Rv, None, [])
-            return ExecOutput(_state_total(Rv, mode), None, None, [])
+            return ExecOutput(SS.state_total(Rv, mode), None, None, [])
         if right is None:
             Lv = vapply(left.arrivals_v)
-            return ExecOutput(_state_total(Lv, mode), None, None, [])
+            return ExecOutput(SS.state_total(Lv, mode), None, None, [])
         Lv = vapply(left.arrivals_v)
         Rv = right.arrivals_v
         if mode == MODE_STATIC:
@@ -278,8 +278,7 @@ def _inner(gdev, qry, split, mode, n_buckets, params, sb):
         elif mode == MODE_BUCKET:
             total = jnp.sum(Lv * Rv, axis=0)
         else:
-            from .engine import _join_interval_counts
-            total = jnp.sum(_join_interval_counts(Lv, Rv))
+            total = jnp.sum(SS.join_interval_counts(Lv, Rv))
         return ExecOutput(total, None, None, [])
 
     # ETR at join: left/right final arrivals share the split-type edge slice
@@ -297,8 +296,8 @@ def _inner(gdev, qry, split, mode, n_buckets, params, sb):
         mk = (vm[:, None] & vv).astype(jnp.float32)[dst_local]
         total = jnp.sum(W * right.arrivals_e * mk, axis=0)
     else:
-        Wc = _apply_validity(W, vm[dst_local], vv[dst_local], mode)
-        total = jnp.sum(_join_interval_counts_edges(Wc, right.arrivals_e))
+        Wc = SS.apply_validity(W, vm[dst_local], vv[dst_local], mode)
+        total = jnp.sum(SS.join_interval_counts_edges(Wc, right.arrivals_e))
     return ExecOutput(total, None, None, [])
 
 

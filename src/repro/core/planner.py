@@ -20,6 +20,21 @@ Two pieces:
    stored as JSON, reusable across graphs/queries on the same host — exactly
    the paper's methodology with phase extents adapted to the dense engine.
 
+   **Distribution-aware extension**: when the planner is given a
+   ``Partitioning`` (graphdata.partitioner), per-superstep compute extents
+   are divided over the workers and a per-superstep exchange term
+
+     θ_net · m_net_i
+
+   is added, where ``m_net_i`` is the STRUCTURAL boundary volume of that
+   superstep — the partitioner's halo ghost-entry count for plain hops, the
+   full traversal frontier for ETR hops (whose rank-prefix tables ship the
+   whole frontier) — exactly the volume the partitioned executor exchanges
+   and the volume θ_net is fitted against from measured partitioned
+   supersteps (engine_partitioned.measure_supersteps), keeping the model,
+   the fit and the executor in one unit (paper Sec. 5's communication
+   phase).
+
 What matters (paper Sec. 5): not absolute accuracy but *discriminating good
 plans from bad*.
 """
@@ -41,8 +56,9 @@ DEFAULT_COEFFS = {
     "theta_v": 2.0e-5,    # ms per vertex in the typed slice
     "theta_e": 6.0e-5,    # ms per traversal edge in the hop slice
     "theta_etr": 8.0e-5,  # extra ms per edge on ETR hops (sort-prefix path)
-    "theta_m": 2.0e-5,    # ms per estimated delivered message (exchange term)
+    "theta_m": 2.0e-5,    # ms per estimated delivered message
     "theta_init": 2.0e-5, # ms per vertex evaluated at init
+    "theta_net": 8.0e-5,  # ms per cross-partition boundary message (exchange)
 }
 
 _COEFF_PATH = os.path.join(os.path.dirname(__file__), "..", "configs", "cost_coeffs.json")
@@ -72,10 +88,11 @@ class StepEstimate:
     a_e: float       # active edges (Eq. 3)
     f_e: float       # edge-predicate frequency
     m_e: float       # matched edges / messages (Eq. 4)
-    t_ms: float      # estimated superstep time
+    t_ms: float      # estimated superstep time (per-worker makespan if W > 1)
     v_slice: float   # typed vertex extent processed
     e_slice: float   # typed traversal-edge extent processed
     etr: bool
+    m_net: float = 0.0  # estimated cross-partition boundary messages
 
 
 @dataclasses.dataclass
@@ -123,9 +140,17 @@ def estimate_segment(
     e_preds: Sequence[Q.EdgePredicate],
     coeffs: dict,
     trav_arrivals_by_type: np.ndarray,
+    n_workers: int = 1,
+    exchange_volume: float = 0.0,
+    frontier_volume: float = 0.0,
 ) -> List[StepEstimate]:
+    """Per-superstep estimates.  With ``n_workers > 1`` compute extents are
+    divided over workers (balanced partitions) and each hop pays the θ_net
+    exchange term: ``exchange_volume`` (halo ghost entries) on plain hops,
+    ``frontier_volume`` (the full 2E traversal frontier) on ETR hops."""
     steps: List[StepEstimate] = []
     prev_m_e = None
+    w = max(1, int(n_workers))
     for i, vp in enumerate(v_preds):
         V_sigma = stats.type_count(vp.vtype)
         if i == 0:
@@ -159,24 +184,49 @@ def estimate_segment(
             if nxt_type >= 0
             else float(trav_arrivals_by_type.sum())
         )
+        # structural boundary volume of this hop: what the executor actually
+        # exchanges (and what θ_net was fitted on) — ETR hops ship the whole
+        # frontier's prefix tables (see engine_partitioned)
+        m_net = 0.0
+        if w > 1:
+            m_net = frontier_volume if ep.etr_op != -1 else exchange_volume
         t = (
             coeffs["theta0"]
-            + (coeffs["theta_init"] if i == 0 else coeffs["theta_v"]) * V_sigma
-            + coeffs["theta_e"] * e_slice
-            + (coeffs["theta_etr"] * e_slice if ep.etr_op != -1 else 0.0)
-            + coeffs["theta_m"] * max(m_e, 0.0)
+            + ((coeffs["theta_init"] if i == 0 else coeffs["theta_v"]) * V_sigma
+               + coeffs["theta_e"] * e_slice
+               + (coeffs["theta_etr"] * e_slice if ep.etr_op != -1 else 0.0)
+               + coeffs["theta_m"] * max(m_e, 0.0)) / w
+            + coeffs.get("theta_net", 0.0) * m_net
         )
         steps.append(StepEstimate(a_v, f_v, m_v, a_e, f_e, m_e, t, V_sigma, e_slice,
-                                  ep.etr_op != -1))
+                                  ep.etr_op != -1, m_net))
         prev_m_e = max(m_e, 0.0)
     return steps
 
 
 class Planner:
-    def __init__(self, graph, stats: GraphStats, coeffs: Optional[dict] = None):
+    def __init__(self, graph, stats: GraphStats, coeffs: Optional[dict] = None,
+                 partitioning=None):
+        """``partitioning``: an optional graphdata.partitioner.Partitioning
+        (or PartitionArrays); when given, plan costs are per-worker makespans
+        including the θ_net structural-exchange term from the partitioner's
+        halo ghost counts."""
         self.g = graph
         self.stats = stats
         self.coeffs = coeffs or load_coeffs()
+        self.n_workers = 1
+        self.cut_frac = 0.0
+        self.exchange_volume = 0.0
+        self.frontier_volume = 0.0
+        if partitioning is not None:
+            arrays = partitioning
+            if not hasattr(arrays, "exchange_volume"):  # a Partitioning
+                from ..graphdata.partitioner import build_partition_arrays
+                arrays = build_partition_arrays(graph, partitioning)
+            self.n_workers = int(arrays.n_workers)
+            self.cut_frac = float(arrays.stats.get("edge_cut", 0.0))
+            self.exchange_volume = float(arrays.exchange_volume())
+            self.frontier_volume = float(2 * graph.n_edges)
         # traversal arrivals per vertex type (edge extent of a typed hop)
         deg = graph.in_degree.astype(np.int64) + graph.out_degree.astype(np.int64)
         self.trav_arrivals_by_type = np.zeros(graph.n_vertex_types, np.int64)
@@ -194,6 +244,9 @@ class Planner:
             steps += estimate_segment(
                 self.stats, qry.v_preds[: split + 1], qry.e_preds[:split],
                 self.coeffs, self.trav_arrivals_by_type,
+                n_workers=self.n_workers,
+                exchange_volume=self.exchange_volume,
+                frontier_volume=self.frontier_volume,
             )
         if (n - 1) - split > 0:
             rev = qry.reversed()
@@ -201,6 +254,9 @@ class Planner:
             steps += estimate_segment(
                 self.stats, rev.v_preds[: m + 1], rev.e_preds[:m],
                 self.coeffs, self.trav_arrivals_by_type,
+                n_workers=self.n_workers,
+                exchange_volume=self.exchange_volume,
+                frontier_volume=self.frontier_volume,
             )
         t = sum(s.t_ms for s in steps)
         return PlanEstimate(split, t, steps)

@@ -1,0 +1,410 @@
+"""Shared superstep core — the hop primitives every executor builds on.
+
+The engine stack is three executors over ONE superstep vocabulary:
+
+  engine.py             dense executor     — whole-graph tensor supersteps
+  engine_sliced.py      sliced executor    — type-slice extents per hop (§Perf)
+  engine_partitioned.py partitioned executor — per-worker shards + boundary
+                                              exchange each hop (distributed)
+
+This module owns the primitives they share, so a hop means the same thing in
+all three:
+
+  predicate evaluation   eval_predicate()        — type ∧ folded clauses over
+                                                   property columns, returning
+                                                   (match, validity) per mode
+  edge masking           direction_mask(),
+                         edge_predicate_weights() — edge predicate ∧ direction
+  state algebra          init_state(), apply_validity(), apply_edge(),
+                         state_total(), cells_to_buckets()
+  ETR rank application   etr_weighted()          — rank tables + segment prefix
+                                                   sums (exact, O(E) per hop)
+  delivery               deliver()               — sorted segment-sum of
+                                                   per-edge counts by arrival
+  joins                  join_interval_counts(), join_interval_counts_edges()
+
+Temporal modes (shared by all executors):
+
+  MODE_STATIC    scalar counts per entity
+  MODE_BUCKET    counts per time bucket          state [..., B]
+  MODE_INTERVAL  counts per running-intersection interval cell
+                 (start-bucket, end-bucket)      state [..., B, B+1]
+
+State layout contract: every state/count tensor has the entity axis FIRST
+(vertices, traversal edges, or padded per-worker slots) and the temporal-state
+axes last.  All primitives here are elementwise over the entity axis except
+``deliver`` (segment reduction) and ``etr_weighted`` (segment prefix sums),
+which is exactly what makes the partitioned executor possible: elementwise
+steps shard trivially, the two segment steps define the communication pattern.
+
+Bucket edges are threaded through traces with the ``bucket_scope`` context
+manager (a trace-scoped stack, not a function argument, so deeply nested
+helpers stay signature-stable).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import intervals as iv
+from . import query as Q
+
+MODE_STATIC = 0
+MODE_BUCKET = 1
+MODE_INTERVAL = 2
+
+# ETR term kinds (rank-array rows in graph.EtrTables):
+#   0: #(acc.start <  cur.start)     1: #(acc.start <= cur.start)
+#   2: #(acc.start <  cur.end)       3: #(acc.end   <= cur.start)
+# spec: (alpha, ((sign, term), ...)) st. result = alpha * n_acc + Σ sign * P[term]
+ETR_SPECS = {
+    (iv.FULLY_BEFORE, False): (0.0, ((1.0, 3),)),
+    (iv.STARTS_BEFORE, False): (0.0, ((1.0, 0),)),
+    (iv.FULLY_AFTER, False): (1.0, ((-1.0, 2),)),
+    (iv.STARTS_AFTER, False): (1.0, ((-1.0, 1),)),
+    (iv.OVERLAPS, False): (0.0, ((1.0, 2), (-1.0, 3))),
+    (iv.FULLY_BEFORE, True): (1.0, ((-1.0, 2),)),
+    (iv.STARTS_BEFORE, True): (1.0, ((-1.0, 1),)),
+    (iv.FULLY_AFTER, True): (0.0, ((1.0, 3),)),
+    (iv.STARTS_AFTER, True): (0.0, ((1.0, 0),)),
+    (iv.OVERLAPS, True): (0.0, ((1.0, 2), (-1.0, 3))),
+}
+
+# Trace-scoped bucket-edge stack; executors push via bucket_scope().
+TRACE_BEDGES: List = []
+
+
+@contextlib.contextmanager
+def bucket_scope(bedges):
+    """Make ``bedges`` the current bucket edges for the enclosed trace."""
+    TRACE_BEDGES.append(bedges)
+    try:
+        yield
+    finally:
+        TRACE_BEDGES.pop()
+
+
+def current_bedges():
+    return TRACE_BEDGES[-1] if TRACE_BEDGES else None
+
+
+# =========================================================================
+# clause evaluation
+# =========================================================================
+def _eval_prop_clause(col, value, cmp: int, mode: int, bedges, ent_life):
+    """Evaluate one property clause over an entity set.
+
+    Returns (match bool[N], validity) where validity is a bucket mask [N,B]
+    (MODE_BUCKET), an interval int32[N,2] (MODE_INTERVAL), or None.
+    """
+    vals, life = col  # [N,S], [N,S,2]
+    slot_eq = vals == value
+    has_any = jnp.any(vals >= 0, axis=1)
+    if cmp == Q.P_NEQ:
+        match = has_any & ~jnp.any(slot_eq, axis=1)
+        if mode == MODE_BUCKET:
+            return match, iv.interval_to_bucket_mask(ent_life, bedges)
+        if mode == MODE_INTERVAL:
+            return match, ent_life
+        return match, None
+    # EQ / CONTAINS: any slot equal
+    match = jnp.any(slot_eq, axis=1)
+    if mode == MODE_BUCKET:
+        slot_masks = iv.interval_to_bucket_mask(life, bedges)  # [N,S,B]
+        valid = jnp.any(slot_masks & slot_eq[..., None], axis=1)
+        return match, valid
+    if mode == MODE_INTERVAL:
+        idx = jnp.argmax(slot_eq, axis=1)
+        sel = jnp.take_along_axis(life, idx[:, None, None], axis=1)[:, 0]  # [N,2]
+        valid = jnp.where(match[:, None], sel, 0)
+        return match, valid
+    return match, None
+
+
+def _eval_time_clause(ent_life, cmp_id: int, interval, mode: int, bedges):
+    const_iv = jnp.broadcast_to(jnp.asarray(interval, jnp.int32), ent_life.shape)
+    match = iv.compare(cmp_id, ent_life, const_iv)
+    if mode == MODE_BUCKET:
+        return match, iv.interval_to_bucket_mask(ent_life, bedges)
+    if mode == MODE_INTERVAL:
+        return match, ent_life
+    return match, None
+
+
+def _fold_clauses(parts, mode):
+    """AND/OR left-fold of (conj, match, validity) triples."""
+    acc_m, acc_v = None, None
+    for conj, m, v in parts:
+        if acc_m is None:
+            acc_m, acc_v = m, v
+            continue
+        if conj == Q.AND:
+            acc_m = acc_m & m
+            if mode == MODE_BUCKET:
+                acc_v = acc_v & v
+            elif mode == MODE_INTERVAL:
+                acc_v = iv.intersect(acc_v, v)
+        else:  # OR
+            new_m = acc_m | m
+            if mode == MODE_BUCKET:
+                acc_v = (acc_v & acc_m[:, None]) | (v & m[:, None])
+            elif mode == MODE_INTERVAL:
+                # span approximation for OR in interval mode (documented)
+                acc_v = jnp.where(
+                    (acc_m & ~m)[:, None], acc_v,
+                    jnp.where((m & ~acc_m)[:, None], v, iv.span(acc_v, v)),
+                )
+            acc_m = new_m
+    return acc_m, acc_v
+
+
+def eval_predicate(
+    props: Dict[int, tuple],
+    ent_type,
+    ent_life,
+    req_type: int,
+    clauses: Sequence[Q.Clause],
+    params,
+    pbase: int,
+    mode: int,
+    bedges,
+):
+    """Full predicate = type check ∧ folded clauses; returns (match, validity).
+
+    ``params`` carries the data values: row i = (value, t_lo, t_hi) for the
+    i-th clause of the whole query; ``pbase`` is this predicate's first row.
+    """
+    n = ent_life.shape[0]
+    match = jnp.ones((n,), bool)
+    if req_type >= 0:
+        match = ent_type == req_type
+    match = match & (ent_life[:, 0] < ent_life[:, 1])
+    if mode == MODE_BUCKET:
+        validity = iv.interval_to_bucket_mask(ent_life, bedges)
+    elif mode == MODE_INTERVAL:
+        validity = ent_life
+    else:
+        validity = None
+    parts = []
+    for i, c in enumerate(clauses):
+        row = params[pbase + i]
+        if c.kind == Q.K_PROP:
+            col = props[c.key]
+            m, v = _eval_prop_clause(col, row[0], c.cmp, mode, bedges, ent_life)
+        else:
+            m, v = _eval_time_clause(ent_life, c.cmp, row[1:3], mode, bedges)
+        parts.append((c.conj, m, v))
+    if parts:
+        cm, cv = _fold_clauses(parts, mode)
+        match = match & cm
+        if mode == MODE_BUCKET:
+            validity = validity & cv
+        elif mode == MODE_INTERVAL:
+            validity = iv.intersect(validity, cv)
+    return match, validity
+
+
+# =========================================================================
+# edge masking
+# =========================================================================
+def direction_mask(t_isfwd, direction: int):
+    """bool mask selecting traversal edges compatible with a hop direction."""
+    if direction == Q.DIR_OUT:
+        return t_isfwd == 1
+    if direction == Q.DIR_IN:
+        return t_isfwd == 0
+    return jnp.ones_like(t_isfwd, bool)
+
+
+def edge_predicate_weights(gdev, ep: Q.EdgePredicate, params, pbase, mode, bedges):
+    """(weight mask bool[2E], bucket/interval validity) for one hop."""
+    t_life = gdev["t_life"]
+    match, validity = eval_predicate(
+        gdev["eprops_t"], gdev["t_type"], t_life, ep.etype, ep.clauses,
+        params, pbase, mode, bedges,
+    )
+    return (match & direction_mask(gdev["t_isfwd"], ep.direction)), validity
+
+
+# =========================================================================
+# mode-generic state ops
+# =========================================================================
+def init_state(match, validity, mode: int, n_buckets: int):
+    """Seed DP state from a vertex predicate result."""
+    if mode == MODE_STATIC:
+        return match.astype(jnp.float32)
+    if mode == MODE_BUCKET:
+        return (match[:, None] & validity).astype(jnp.float32)
+    # INTERVAL: one-hot cell at (start_bucket, end_bucket); cells [B, B+1]
+    B = n_buckets
+    sb, eb = _interval_to_cells(validity, B)
+    cell = (
+        jax.nn.one_hot(sb, B, dtype=jnp.float32)[:, :, None]
+        * jax.nn.one_hot(eb, B + 1, dtype=jnp.float32)[:, None, :]
+    )
+    return cell * match[:, None, None].astype(jnp.float32)
+
+
+def _interval_to_cells(ivl, B):
+    """Map int32[N,2] intervals to (start_bucket, end_bucket) cell ids using
+    the bucket edges of the enclosing bucket_scope()."""
+    bedges = TRACE_BEDGES[-1]
+    sb = jnp.clip(jnp.searchsorted(bedges, ivl[:, 0], side="right") - 1, 0, B - 1)
+    eb = jnp.clip(jnp.searchsorted(bedges, ivl[:, 1], side="left"), 0, B)
+    empty = ivl[:, 0] >= ivl[:, 1]
+    eb = jnp.where(empty, sb, eb)  # empty → zero-width cell (filtered later)
+    return sb, eb
+
+
+def apply_validity(state, match, validity, mode: int):
+    """Multiply state by a predicate's (match, validity) at its entity."""
+    if mode == MODE_STATIC:
+        return state * match.astype(jnp.float32)
+    if mode == MODE_BUCKET:
+        return state * (match[:, None] & validity).astype(jnp.float32)
+    # INTERVAL: clamp running-intersection cells by the validity interval
+    B = state.shape[-2]
+    sb, eb = _interval_to_cells(validity, B)
+    out = _clamp_start(state, sb)
+    out = _clamp_end(out, eb)
+    out = out * match[..., None, None].astype(jnp.float32)
+    return _mask_valid_cells(out)
+
+
+def apply_edge(src_val, wmask, evalidity, mode: int):
+    """Apply a hop's edge weights to gathered source values (per-edge)."""
+    if mode == MODE_STATIC:
+        return src_val * wmask.astype(jnp.float32)
+    if mode == MODE_BUCKET:
+        return src_val * (wmask[:, None] & evalidity).astype(jnp.float32)
+    return apply_validity(src_val, wmask, evalidity, mode)
+
+
+def _clamp_start(state, ps):
+    """cells[n, s, e] move to (max(s, ps[n]), e)."""
+    B = state.shape[-2]
+    cum = jnp.cumsum(state, axis=-2)
+    keep = (jnp.arange(B)[None, :] > ps[:, None]).astype(state.dtype)
+    cum_at = jnp.take_along_axis(cum, ps[:, None, None], axis=-2)[:, 0, :]
+    onehot = jax.nn.one_hot(ps, B, dtype=state.dtype)
+    return state * keep[:, :, None] + onehot[:, :, None] * cum_at[:, None, :]
+
+
+def _clamp_end(state, pe):
+    """cells[n, s, e] move to (s, min(e, pe[n]))."""
+    Bp1 = state.shape[-1]
+    rcum = jnp.cumsum(state[..., ::-1], axis=-1)[..., ::-1]
+    keep = (jnp.arange(Bp1)[None, :] < pe[:, None]).astype(state.dtype)
+    cum_at = jnp.take_along_axis(rcum, pe[:, None, None], axis=-1)[:, :, 0]
+    onehot = jax.nn.one_hot(pe, Bp1, dtype=state.dtype)
+    return state * keep[:, None, :] + onehot[:, None, :] * cum_at[:, :, None]
+
+
+def _mask_valid_cells(state):
+    B, Bp1 = state.shape[-2], state.shape[-1]
+    s_ids = jnp.arange(B)[:, None]
+    e_ids = jnp.arange(Bp1)[None, :]
+    return state * (s_ids < e_ids).astype(state.dtype)
+
+
+def state_total(state, mode):
+    if mode == MODE_STATIC:
+        return jnp.sum(state)
+    if mode == MODE_BUCKET:
+        return jnp.sum(state, axis=0)  # per-bucket totals
+    return jnp.sum(_mask_valid_cells(state))
+
+
+def cells_to_buckets(state):
+    """[N,B,B+1] running-interval cells → [N,B] per-bucket time series."""
+    B = state.shape[-2]
+    out = []
+    s_ids = jnp.arange(B)[:, None]
+    e_ids = jnp.arange(B + 1)[None, :]
+    for b in range(B):
+        m = ((s_ids <= b) & (e_ids > b)).astype(state.dtype)
+        out.append(jnp.sum(state * m, axis=(-2, -1)))
+    return jnp.stack(out, axis=-1)
+
+
+# =========================================================================
+# delivery
+# =========================================================================
+def deliver(cnt_e, seg_ids, num_segments: int, indices_are_sorted: bool = True):
+    """Sorted segment-sum of per-edge counts by arrival vertex — the message
+    delivery of one superstep.  Summation order is the canonical (arrival-
+    sorted) edge order, which is what makes the partitioned executor's
+    per-worker deliveries bit-identical to the dense one."""
+    return jax.ops.segment_sum(
+        cnt_e, seg_ids, num_segments=num_segments,
+        indices_are_sorted=indices_are_sorted,
+    )
+
+
+# =========================================================================
+# ETR prefix machinery
+# =========================================================================
+def etr_weighted(gdev, cnt_e_prev, op: int, backward: bool, use_arr: bool):
+    """Per current traversal edge: Σ over accumulated arrivals at its vertex
+    of cnt × [ETR condition], via rank tables (exact)."""
+    alpha, terms = ETR_SPECS[(op, backward)]
+    perm_s = gdev["etr_perm_start"]
+    perm_e = gdev["etr_perm_end"]
+    ranks = gdev["etr_arr_ranks"] if use_arr else gdev["etr_dep_ranks"]
+    ptr = gdev["arr_ptr"]
+    segv = gdev["t_dst"] if use_arr else gdev["t_src"]
+
+    trailing = cnt_e_prev.shape[1:]
+    zero = jnp.zeros((1,) + trailing, cnt_e_prev.dtype)
+
+    S_s = jnp.concatenate([zero, jnp.cumsum(cnt_e_prev[perm_s], axis=0)], axis=0)
+    need_end = any(t == 3 for _, t in terms)
+    S_e = (
+        jnp.concatenate([zero, jnp.cumsum(cnt_e_prev[perm_e], axis=0)], axis=0)
+        if need_end
+        else None
+    )
+    base_pos = ptr[segv]
+    base_s = S_s[base_pos]
+    out = 0.0
+    if alpha:
+        n_acc = S_s[ptr[segv + 1]] - base_s
+        out = alpha * n_acc
+    for sign, term in terms:
+        S = S_e if term == 3 else S_s
+        base = (S_e[base_pos] if term == 3 else base_s)
+        val = S[base_pos + ranks[term]] - base
+        out = out + sign * val
+    return out
+
+
+# =========================================================================
+# joins
+# =========================================================================
+def join_interval_counts(L, R):
+    """Distinct-path count from left/right running-intersection cell states.
+
+    D = Σ_v Σ_{cells} L·R·[intervals overlap]; computed via the complement
+    (total − disjoint) with cumsum contractions — O(V·B²).
+    L, R: [V, B, B+1].
+    """
+    totL = L.sum(axis=(1, 2))
+    totR = R.sum(axis=(1, 2))
+    Le = L.sum(axis=1)      # [V, B+1] marginal over start
+    Ls = L.sum(axis=2)      # [V, B]   marginal over end
+    Re = R.sum(axis=1)
+    Rs = R.sum(axis=2)
+    # pairs with L.end <= R.start  (cells: e1 <= s2)
+    cumLe = jnp.cumsum(Le, axis=1)  # Σ_{e1 <= x}
+    d1 = jnp.einsum("vb,vb->v", Rs, cumLe[:, : Rs.shape[1]])
+    # pairs with R.end <= L.start
+    cumRe = jnp.cumsum(Re, axis=1)
+    d2 = jnp.einsum("vb,vb->v", Ls, cumRe[:, : Ls.shape[1]])
+    return totL * totR - d1 - d2
+
+
+# identical contraction at traversal-edge granularity (ETR-at-join)
+join_interval_counts_edges = join_interval_counts

@@ -10,6 +10,13 @@ quality so the approximation is measurable.
 Placement: sub-partitions are assigned round-robin over workers, so each
 worker holds ~t·p/w sub-partitions with ~p/w per type — the paper's load
 balancing argument for typed supersteps.
+
+Execution arrays: ``build_partition_arrays`` lowers a ``Partitioning`` into
+the padded per-worker tensors the partitioned executor
+(``core.engine_partitioned``) runs on — each worker owns the traversal edges
+*arriving* at its vertices (so delivery is a purely local segment-sum) plus a
+halo table of the source vertices it must receive boundary state for each
+superstep (the exchange).
 """
 from __future__ import annotations
 
@@ -126,6 +133,125 @@ def _edge_cut(graph: TemporalGraph, part_of: np.ndarray) -> float:
     crossing = part_of[graph.e_src] != part_of[graph.e_dst]
     w = (graph.e_life[:, 1] - graph.e_life[:, 0]).astype(np.float64)
     return float((w * crossing).sum() / max(w.sum(), 1e-9))
+
+
+@dataclasses.dataclass
+class PartitionArrays:
+    """Padded per-worker execution tables for the partitioned executor.
+
+    Shapes: W = n_workers, Vmax/Emax/Hmax = padded per-worker extents.
+    Padding sentinels: vertex ids pad with V, traversal-edge ids with 2E —
+    both index a synthetic zero row on device — and ``dst_local`` pads with
+    Vmax (a trash delivery segment that is sliced off).
+
+    Ownership invariants (asserted by ``build_partition_arrays``):
+      * every vertex appears in exactly one worker's ``own_ids`` row;
+      * every traversal edge appears in exactly one worker's ``edge_ids`` row
+        (the worker owning its arrival vertex), preserving canonical
+        arrival-sorted order so per-worker segment-sum delivery reproduces
+        the dense engine's summation order bit-for-bit.
+    """
+
+    n_workers: int
+    own_ids: np.ndarray    # int32[W, Vmax] — owned global vertex ids, pad = V
+    edge_ids: np.ndarray   # int32[W, Emax] — owned traversal-edge ids, pad = 2E
+    dst_local: np.ndarray  # int32[W, Emax] — arrival slot in own_ids, pad = Vmax
+    halo_ids: np.ndarray   # int32[W, Hmax] — source vertices needed, pad = V
+    src_halo: np.ndarray   # int32[W, Emax] — per-edge slot into halo_ids, pad = 0
+    owner_of_vertex: np.ndarray  # int32[V]
+    n_own: np.ndarray      # int64[W] — real owned-vertex count
+    n_edges: np.ndarray    # int64[W] — real owned-edge count
+    n_halo: np.ndarray     # int64[W] — halo table size
+    n_ghost: np.ndarray    # int64[W] — halo entries owned by ANOTHER worker
+    stats: Dict
+
+    @property
+    def v_max(self) -> int:
+        return int(self.own_ids.shape[1])
+
+    @property
+    def e_max(self) -> int:
+        return int(self.edge_ids.shape[1])
+
+    @property
+    def h_max(self) -> int:
+        return int(self.halo_ids.shape[1])
+
+    def exchange_volume(self) -> int:
+        """Boundary messages per superstep: ghost-state entries received."""
+        return int(self.n_ghost.sum())
+
+
+def build_partition_arrays(
+    graph: TemporalGraph, part: Partitioning
+) -> PartitionArrays:
+    """Lower a vertex partitioning into padded per-worker superstep tables."""
+    V = graph.n_vertices
+    W = part.n_workers
+    tr = graph.traversal
+    t_src = tr["t_src"].astype(np.int64)
+    t_dst = tr["t_dst"].astype(np.int64)
+    n2e = t_src.shape[0]
+
+    owner = part.worker_of_part[part.part_of].astype(np.int32)  # int32[V]
+    local_of = np.zeros(V, np.int64)
+
+    owned: List[np.ndarray] = []
+    edges: List[np.ndarray] = []
+    halos: List[np.ndarray] = []
+    src_halos: List[np.ndarray] = []
+    dst_locals: List[np.ndarray] = []
+    n_ghost = np.zeros(W, np.int64)
+    edge_owner = owner[t_dst]
+    for w in range(W):
+        own = np.where(owner == w)[0].astype(np.int64)  # ascending
+        local_of[own] = np.arange(own.shape[0])
+        eidx = np.where(edge_owner == w)[0].astype(np.int64)  # canonical order
+        halo = np.unique(t_src[eidx])
+        owned.append(own)
+        edges.append(eidx)
+        halos.append(halo)
+        src_halos.append(np.searchsorted(halo, t_src[eidx]))
+        dst_locals.append(local_of[t_dst[eidx]])
+        n_ghost[w] = int((owner[halo] != w).sum())
+
+    n_own = np.asarray([o.shape[0] for o in owned], np.int64)
+    n_edges = np.asarray([e.shape[0] for e in edges], np.int64)
+    n_halo = np.asarray([h.shape[0] for h in halos], np.int64)
+    assert int(n_own.sum()) == V, "every vertex must be owned exactly once"
+    assert int(n_edges.sum()) == n2e, "every traversal edge owned exactly once"
+
+    v_max = max(1, int(n_own.max()))
+    e_max = max(1, int(n_edges.max()))
+    h_max = max(1, int(n_halo.max()))
+
+    def _pad(rows, width, fill):
+        out = np.full((W, width), fill, np.int32)
+        for w, r in enumerate(rows):
+            out[w, : r.shape[0]] = r
+        return out
+
+    arrays = PartitionArrays(
+        n_workers=W,
+        own_ids=_pad(owned, v_max, V),
+        edge_ids=_pad(edges, e_max, n2e),
+        dst_local=_pad(dst_locals, e_max, v_max),
+        halo_ids=_pad(halos, h_max, V),
+        src_halo=_pad(src_halos, e_max, 0),
+        owner_of_vertex=owner,
+        n_own=n_own,
+        n_edges=n_edges,
+        n_halo=n_halo,
+        n_ghost=n_ghost,
+        stats=dict(
+            **part.stats,
+            n_workers=W,
+            edge_imbalance=float(n_edges.max() / max(n_edges.mean(), 1e-9)),
+            ghost_frac=float(n_ghost.sum() / max(n_halo.sum(), 1)),
+            exchange_volume=int(n_ghost.sum()),
+        ),
+    )
+    return arrays
 
 
 def reassign_on_failure(p: Partitioning, failed_worker: int) -> Partitioning:

@@ -110,7 +110,15 @@ def make_pipelined_forward(layer_fn, n_stages: int, cfg: PipelineCfg, mesh):
     ``stacked_params`` are sharded over the pipeline axis on dim 0 (stages);
     x is replicated along the pipeline axis (each stage sees the queue).
     """
-    from jax import shard_map
+    try:  # moved out of experimental in newer jax
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+    import inspect
+    # replication-check kwarg renamed check_rep → check_vma across jax
+    # versions; detect from the signature, not the import location
+    _rep_kw = ("check_vma" if "check_vma" in
+               inspect.signature(shard_map).parameters else "check_rep")
 
     axis = cfg.axis
 
@@ -118,9 +126,6 @@ def make_pipelined_forward(layer_fn, n_stages: int, cfg: PipelineCfg, mesh):
         # each shard holds exactly its stage: strip the sharded stage dim
         stage_params = jax.tree_util.tree_map(lambda a: a[0], stage_params)
         return pipeline_apply(layer_fn, stage_params, x_micro, cfg, n_stages)
-
-    pspec = jax.tree_util.tree_map(lambda _: P(axis), jax.tree_util.tree_leaves(
-        {"_": 0}))  # placeholder; real spec built below
 
     def wrapped(params_stacked, x):
         # reshape [L, ...] → [S, L/S, ...] then shard dim 0
@@ -138,7 +143,7 @@ def make_pipelined_forward(layer_fn, n_stages: int, cfg: PipelineCfg, mesh):
             in_specs=(jax.tree_util.tree_map(
                 lambda a: P(axis, *([None] * (a.ndim - 1))), staged), xspec),
             out_specs=xspec,
-            check_vma=False,
+            **{_rep_kw: False},
         )(staged, x)
 
     return wrapped

@@ -3,8 +3,12 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import engine as E
 from repro.core import intervals as iv
