@@ -6,8 +6,10 @@ Features per measured superstep batch:
 where the first five come from dense single-stream runs (m_net = 0) and the
 exchange column m_net comes from MEASURED partitioned supersteps
 (engine_partitioned.measure_supersteps): per-worker compute extents divide by
-the worker count, the boundary-message volume is the partitioner's halo ghost
-count.  The fitted θ_net makes plan selection distribution-aware.
+the worker count, the boundary-message volume is the partitioner's halo
+ghost count on plain hops and its boundary rank-summary count (cut edges)
+on ETR hops — the volumes the partitioned executor actually exchanges.  The
+fitted θ_net makes plan selection distribution-aware.
 """
 from __future__ import annotations
 
@@ -90,14 +92,14 @@ def run(write: bool = True):
             v_s, e_s, etrs = _step_features(g, qry, trav_by_type, V, E2)
             # features must describe what measure_supersteps TIMES: one
             # dispatch per hop of local compute (edge apply + delivery +
-            # halo gather) — init predicate eval, the final join AND the
-            # ETR rank-prefix step are untimed there, so those columns are
-            # zeroed for these rows.
+            # halo gather; on ETR hops also the per-worker rank-summary
+            # prefix tables) — init predicate eval and the final join are
+            # untimed there, so those columns are zeroed for these rows.
             feats = np.asarray([
                 len(qry.e_preds),
                 0.0,
                 float(np.sum(e_s[:-1])) / w,
-                0.0,
+                float(np.sum(etrs[:-1] * e_s[:-1])) / w,
                 float(np.sum(e_s[:-1])) * 0.05 / w,
                 float(prof.exchange_msgs.sum()),
             ])

@@ -11,7 +11,8 @@ reported quantities are measured wall-clock:
   * balance_eff: mean worker time / max worker time (load-balance component);
   * weak_eff: w=2-relative per-edge makespan throughput × balance
     (perfect weak scaling ⇒ flat makespan per edge);
-  * exchange: measured boundary-message volume per query (halo ghosts).
+  * exchange: measured boundary-message volume per query (halo ghosts on
+    plain hops, boundary ETR rank summaries — cut edges — on ETR hops).
 """
 from __future__ import annotations
 

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# One-command CI gate: tier-1 tests + engine smoke at CI scale.
+# One-command CI gate: tier-1 tests + conformance matrix + engine smoke at
+# CI scale.
 #   ./scripts/ci.sh            # full gate
-#   ./scripts/ci.sh --fast     # tests only (skip the smoke oracle sweep)
+#   ./scripts/ci.sh --fast     # tests only (skip conformance matrix + smoke)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,6 +13,8 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 if [[ "${1:-}" != "--fast" ]]; then
+  echo "== conformance: four-way differential matrix at CI scale =="
+  CONFORMANCE_SCALE=ci python -m pytest tests/test_conformance.py -x -q
   echo "== smoke: engine vs oracle (all modes/splits) =="
   python scripts/smoke_engine.py
 fi

@@ -1,9 +1,15 @@
-"""Dev smoke: engine vs oracle on a small LDBC graph, all modes/splits."""
+"""Dev smoke: engine vs oracle on a small LDBC graph, all modes/splits.
+
+The partitioned executor rides every sweep (n_workers=4): each check asserts
+oracle == dense == partitioned, so the distributed path is exercised against
+ground truth for plain counts, ETR hops, temporal modes and aggregates
+(including MIN/MAX, which now runs partitioned)."""
 import sys
 import numpy as np
 
 from repro.core import query as Q
 from repro.core import engine as E
+from repro.core import engine_partitioned as EP
 from repro.core.ref_engine import RefEngine
 from repro.graphdata.ldbc import LdbcParams, generate_ldbc
 
@@ -37,8 +43,9 @@ def main():
     want = ref.count(q1, mode=E.MODE_STATIC)
     for split in range(3):
         got = E.count_results(g, q1, split=split, mode=E.MODE_STATIC)
-        print(f"q1 split={split}: got={got} want={want}")
-        assert got == want, (got, want)
+        gotp = EP.count_results(g, q1, split=split, n_workers=4)
+        print(f"q1 split={split}: got={got} part={gotp} want={want}")
+        assert got == gotp == want, (got, gotp, want)
 
     # ETR query: person -follows-> person -follows-> person with e1 << e2
     q2 = Q.PathQuery(
@@ -55,8 +62,9 @@ def main():
     want = ref.count(q2, mode=E.MODE_STATIC)
     for split in range(3):
         got = E.count_results(g, q2, split=split, mode=E.MODE_STATIC)
-        print(f"q2(etr<<) split={split}: got={got} want={want}")
-        assert got == want, (split, got, want)
+        gotp = EP.count_results(g, q2, split=split, n_workers=4)
+        print(f"q2(etr<<) split={split}: got={got} part={gotp} want={want}")
+        assert got == gotp == want, (split, got, gotp, want)
 
     # ETR overlap + reverse direction hop
     q3 = Q.PathQuery(
@@ -73,8 +81,9 @@ def main():
     want = ref.count(q3, mode=E.MODE_STATIC)
     for split in range(3):
         got = E.count_results(g, q3, split=split, mode=E.MODE_STATIC)
-        print(f"q3(etr ovl, rev) split={split}: got={got} want={want}")
-        assert got == want, (split, got, want)
+        gotp = EP.count_results(g, q3, split=split, n_workers=4)
+        print(f"q3(etr ovl, rev) split={split}: got={got} part={gotp} want={want}")
+        assert got == gotp == want, (split, got, gotp, want)
 
     # bucket mode (dynamic graph)
     gd = generate_ldbc(LdbcParams(n_persons=40, seed=5, dynamic=True))
@@ -93,16 +102,21 @@ def main():
     for split in range(2):
         out = E.execute(gd, q4, split=split, mode=E.MODE_BUCKET, n_buckets=16)
         got = np.asarray(out.total)
+        gotp = np.asarray(EP.execute(gd, q4, split=split, mode=E.MODE_BUCKET,
+                                     n_buckets=16, n_workers=4).total)
         print(f"q4 bucket split={split}: got={got.astype(int)}")
         print(f"                want    ={want.astype(int)}")
         assert np.allclose(got, want), (split, got, want)
+        assert np.array_equal(got, gotp), (split, got, gotp)
 
     # interval mode distinct counts
     want = refd.count(q4, mode=E.MODE_INTERVAL, n_buckets=16)
     for split in range(2):
         got = E.count_results(gd, q4, split=split, mode=E.MODE_INTERVAL, n_buckets=16)
-        print(f"q4 interval split={split}: got={got} want={want}")
-        assert got == want, (split, got, want)
+        gotp = EP.count_results(gd, q4, split=split, mode=E.MODE_INTERVAL,
+                                n_buckets=16, n_workers=4)
+        print(f"q4 interval split={split}: got={got} part={gotp} want={want}")
+        assert got == gotp == want, (split, got, gotp, want)
 
     # aggregation: count persons followed by each person (EQ4-flavoured)
     q5 = Q.PathQuery(
@@ -118,7 +132,33 @@ def main():
     pv = np.asarray(out.per_vertex)
     got = {i: float(pv[i]) for i in np.nonzero(pv)[0]}
     assert got == want, (sorted(got.items())[:5], sorted(want.items())[:5])
-    print("q5 aggregate count: OK,", len(got), "groups")
+    pvp = np.asarray(EP.execute(g, q5, n_workers=4).per_vertex)
+    assert np.array_equal(pv, pvp)
+    print("q5 aggregate count: OK,", len(got), "groups (dense == partitioned)")
+
+    # MIN/MAX aggregation on the partitioned path (extremum-channel exchange)
+    k_len = b.key_ids["length"]
+    for op, name in ((Q.AGG_MIN, "min"), (Q.AGG_MAX, "max")):
+        q6 = Q.PathQuery(
+            v_preds=(
+                Q.VertexPredicate(tp["person"]),
+                Q.VertexPredicate(tp["post"]),
+            ),
+            e_preds=(Q.EdgePredicate(te["created"], Q.DIR_OUT),),
+            agg_op=op, agg_key=k_len,
+        )
+        want = ref.aggregate(q6, mode=E.MODE_STATIC)
+        out_d = E.execute(g, q6, mode=E.MODE_STATIC)
+        out_p = EP.execute(g, q6, mode=E.MODE_STATIC, n_workers=4)
+        for label, out in (("dense", out_d), ("partitioned", out_p)):
+            pv = np.asarray(out.per_vertex)
+            mm = np.asarray(out.minmax)
+            got = {i: float(mm[i]) for i in np.nonzero(pv)[0]}
+            assert got == want, (name, label,
+                                 sorted(got.items())[:5],
+                                 sorted(want.items())[:5])
+        print(f"q6 aggregate {name}: OK, {len(want)} groups "
+              "(dense == partitioned == oracle)")
 
     print("ALL SMOKE CHECKS PASSED")
 

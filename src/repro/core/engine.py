@@ -114,10 +114,7 @@ def run_segment(
     mch_v = None
     if with_minmax:
         vals0, _ = minmax_col
-        base = vals0[:, 0].astype(jnp.float32)  # first slot value
-        bad = jnp.float32(np.inf if minmax_op == Q.AGG_MIN else -np.inf)
-        mch_v = jnp.where((state_v if mode == MODE_STATIC else state_v.sum(
-            axis=tuple(range(1, state_v.ndim)))) > 0, base, bad)
+        mch_v = SS.minmax_seed(state_v, vals0, minmax_op, mode)
 
     arrivals_e = None
     arrivals_v = None
@@ -158,13 +155,8 @@ def run_segment(
         if with_minmax:
             if ep.etr_op != -1:
                 raise NotImplementedError("min/max aggregation across ETR hops")
-            src_m = mch_v[gdev["t_src"]]
-            alive = (cnt_e if mode == MODE_STATIC else cnt_e.sum(
-                axis=tuple(range(1, cnt_e.ndim)))) > 0
-            bad = jnp.float32(np.inf if minmax_op == Q.AGG_MIN else -np.inf)
-            m_e = jnp.where(alive, src_m, bad)
-            seg = (jax.ops.segment_min if minmax_op == Q.AGG_MIN else jax.ops.segment_max)
-            mch_v = seg(m_e, gdev["t_dst"], num_segments=V, indices_are_sorted=True)
+            m_e = SS.minmax_edge(mch_v[gdev["t_src"]], cnt_e, minmax_op, mode)
+            mch_v = SS.deliver_extremum(m_e, gdev["t_dst"], V, minmax_op)
         stats.append(
             dict(
                 phase=f"hop{i}",
@@ -281,7 +273,13 @@ def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params,
     if n == 1:  # degenerate single-vertex query
         st = SS.init_state(vm, vv, mode, n_buckets)
         total = SS.state_total(st, mode)
-        return ExecOutput(total, st if want_agg else None, None, stats)
+        pv = mm = None
+        if want_agg:
+            pv = st if mode != MODE_INTERVAL else SS.cells_to_buckets(st)
+        if want_minmax:
+            vals0, _ = gdev["vprops"][qry.agg_key]
+            mm = SS.minmax_seed(st, vals0, qry.agg_op, mode)
+        return ExecOutput(total, pv, mm, stats)
 
     if not etr_at_join:
         if left is None:
@@ -291,10 +289,8 @@ def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params,
                 total = SS.state_total(Rv, mode)
                 mm = None
                 if want_minmax:
-                    alive = (Rv if mode == MODE_STATIC else Rv.sum(
-                        axis=tuple(range(1, Rv.ndim)))) > 0
-                    bad = jnp.float32(np.inf if qry.agg_op == Q.AGG_MIN else -np.inf)
-                    mm = jnp.where(alive, right.minmax_v, bad)
+                    mm = jnp.where(SS.state_alive(Rv, mode), right.minmax_v,
+                                   SS.minmax_neutral(qry.agg_op))
                 return ExecOutput(total, per_vertex, mm, stats)
             total = SS.state_total(Rv, mode)
             return ExecOutput(total, None, None, stats)

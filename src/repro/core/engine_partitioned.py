@@ -17,22 +17,29 @@ a ``workers`` mesh axis, with the exchange realised as an ``lax.psum`` of the
 per-device partial scatters (a BSP all-to-all-ish broadcast — the multi-host
 point-to-point exchange is a ROADMAP follow-on).
 
-Semantics: bit-identical to ``engine.execute`` for all three temporal modes.
-Every per-edge/per-vertex value equals the dense engine's because (a) all
-elementwise primitives come from ``superstep.py`` unchanged, and (b) each
-vertex's arrival edges live on ONE worker in canonical order, so per-worker
-segment-sums reproduce the dense summation order exactly.
+Semantics: bit-identical to ``engine.execute`` for all three temporal modes
+and the FULL query surface — plain counts, COUNT aggregates, MIN/MAX
+aggregates and ETR hops.  Every per-edge/per-vertex value equals the dense
+engine's because (a) all elementwise primitives come from ``superstep.py``
+unchanged, and (b) each vertex's arrival edges live on ONE worker in
+canonical order, so per-worker segment reductions reproduce the dense
+delivery exactly.
 
 ETR hops need, per current edge, prefix sums over the arrival segment of its
-*source* vertex — those segments belong to the source vertex's owner.  In
-this simulation the per-edge previous counts are re-assembled globally and
-the rank machinery of ``superstep.etr_weighted`` runs unchanged (semantically
-the owners exchange per-segment prefix tables); the exchange-volume
-accounting below treats the whole hop's edge frontier as boundary traffic in
-that case, which upper-bounds the real cost.
+*source* vertex — segments belong whole to the source vertex's owner, so
+each owner computes the per-edge rank summaries from SEGMENT-LOCAL prefix
+tables over its own prev-hop counts (``superstep.etr_local_summaries`` on
+the partitioner's ``etr_*`` tables) and only the summaries whose consumer is
+another worker cross partitions: O(cut edges) boundary traffic instead of
+the full-frontier reassembly the first version shipped (the simulated
+exchange is the same scatter-through-a-global-buffer used for halo state).
 
-MIN/MAX aggregation is not yet partitioned (COUNT aggregates and plain counts
-are); ``execute`` raises for it.
+MIN/MAX aggregates ride an extremum channel alongside the count state: the
+per-vertex channel is published with the boundary exchange each superstep,
+workers gather the halo slice, form per-edge messages gated by live counts,
+and deliver with a per-worker ``segment_min``/``segment_max``
+(``superstep.deliver_extremum``); under shard_map the publish combines
+partial scatters with ``lax.pmin``/``pmax`` instead of ``psum``.
 """
 from __future__ import annotations
 
@@ -65,6 +72,11 @@ def _prepare_pdev(arrays) -> dict:
         dst_local=jnp.asarray(arrays.dst_local),
         halo_ids=jnp.asarray(arrays.halo_ids),
         src_halo=jnp.asarray(arrays.src_halo),
+        etr_perm_local_s=jnp.asarray(arrays.etr_perm_local_s),
+        etr_perm_local_e=jnp.asarray(arrays.etr_perm_local_e),
+        etr_src_eids=jnp.asarray(arrays.etr_src_eids),
+        etr_src_base=jnp.asarray(arrays.etr_src_base),
+        etr_src_len=jnp.asarray(arrays.etr_src_len),
     )
 
 
@@ -81,13 +93,23 @@ def _shard_rows(global_arr, ids):
     return _zero_pad_rows(global_arr)[ids]
 
 
-def _scatter_rows(rows_w, ids, n_global):
+def _halo_gather(sv_halo, src_halo):
+    """Per-edge gather from each worker's halo slice.  A zero sentinel slot
+    is appended per worker so ``src_halo`` pads (= Hmax) can never alias a
+    real halo vertex, even when a worker's ghost set is empty."""
+    sv_halo = jnp.concatenate(
+        [sv_halo, jnp.zeros_like(sv_halo[:, :1])], axis=1)
+    return jax.vmap(lambda h, s: h[s])(sv_halo, src_halo)
+
+
+def _scatter_rows(rows_w, ids, n_global, fill=0.0):
     """Inverse of _shard_rows: per-worker rows back to global [n_global, ...].
     Each real entity appears in exactly one worker row; pads land on the
-    dropped sentinel row."""
+    dropped sentinel row.  ``fill`` sets the untouched-entry value (0 for
+    count channels, the aggregation-neutral ±inf for extremum channels)."""
     flat_ids = ids.reshape(-1)
     flat = rows_w.reshape((-1,) + rows_w.shape[2:])
-    out = jnp.zeros((n_global + 1,) + rows_w.shape[2:], rows_w.dtype)
+    out = jnp.full((n_global + 1,) + rows_w.shape[2:], fill, rows_w.dtype)
     return out.at[flat_ids].set(flat, unique_indices=False)[:n_global]
 
 
@@ -95,18 +117,22 @@ def _scatter_rows(rows_w, ids, n_global):
 # the local hop (per worker): halo gather → edge apply → local delivery
 # =========================================================================
 def _local_hop(sv_global, wmask, evalid, own_ids, edge_ids, dst_local,
-               halo_ids, src_halo, mode: int):
+               halo_ids, src_halo, mode: int,
+               mch_global=None, minmax_op: int = Q.AGG_MIN):
     """One worker-axis superstep of local compute.
 
     sv_global [V, *TS] is the post-exchange source state every worker reads
     its halo slice from; the remaining args carry a leading worker axis.
-    Returns (cnt_w [W, Emax, *TS], arrivals_w [W, Vmax, *TS]).
+    When ``mch_global`` [V] is given, the extremum channel is exchanged and
+    delivered alongside: same halo gather, per-edge messages gated by the
+    live count, per-worker segment_min/segment_max delivery.
+    Returns (cnt_w [W, Emax, *TS], arrivals_w [W, Vmax, *TS], mch_w or None).
     """
     W, Emax = edge_ids.shape
     v_max = own_ids.shape[1]
     # exchange receive: halo slice of the published state, then local gather
     sv_halo = _shard_rows(sv_global, halo_ids)              # [W, Hmax, *TS]
-    src_val = jax.vmap(lambda h, s: h[s])(sv_halo, src_halo)  # [W, Emax, *TS]
+    src_val = _halo_gather(sv_halo, src_halo)               # [W, Emax, *TS]
     # local edge predicate application (flatten workers: primitives are
     # elementwise over the leading entity axis)
     wmask_w = _shard_rows(wmask, edge_ids)
@@ -120,31 +146,40 @@ def _local_hop(sv_global, wmask, evalid, own_ids, edge_ids, dst_local,
     arrivals_w = jax.vmap(
         lambda c, d: SS.deliver(c, d, v_max + 1)
     )(cnt_w, dst_local)[:, :v_max]
-    return cnt_w, arrivals_w
+    mch_w = None
+    if mch_global is not None:
+        m_src = _halo_gather(_shard_rows(mch_global, halo_ids), src_halo)
+        m_e = SS.minmax_edge(flat(m_src), cnt, minmax_op, mode)
+        mch_w = jax.vmap(
+            lambda m, d: SS.deliver_extremum(m, d, v_max + 1, minmax_op)
+        )(m_e.reshape((W, Emax)), dst_local)[:, :v_max]
+    return cnt_w, arrivals_w, mch_w
 
 
-def _publish(cnt_w, arrivals_w, pdev, n2e, V, psum_axis=None):
+def _publish(cnt_w, arrivals_w, pdev, n2e, V, psum_axis=None,
+             mch_w=None, minmax_op: int = Q.AGG_MIN):
     """Exchange send: scatter per-worker results to global views.  Under
-    shard_map each device holds a partial scatter; psum completes it."""
+    shard_map each device holds a partial scatter; psum (pmin/pmax for the
+    extremum channel) completes it."""
     cnt_g = _scatter_rows(cnt_w, pdev["edge_ids"], n2e)
     arr_g = _scatter_rows(arrivals_w, pdev["own_ids"], V)
+    mch_g = None
+    if mch_w is not None:
+        mch_g = _scatter_rows(mch_w, pdev["own_ids"], V,
+                              fill=SS.minmax_neutral(minmax_op))
     if psum_axis is not None:
         cnt_g = jax.lax.psum(cnt_g, psum_axis)
         arr_g = jax.lax.psum(arr_g, psum_axis)
-    return cnt_g, arr_g
+        if mch_g is not None:
+            combine = (jax.lax.pmin if minmax_op == Q.AGG_MIN
+                       else jax.lax.pmax)
+            mch_g = combine(mch_g, psum_axis)
+    return cnt_g, arr_g, mch_g
 
 
-def _run_hop(gdev, pdev, sv_global, wmask, evalid, mode, n_devices: int):
-    """Dispatch one hop's local compute over the worker axis: plain vmap on a
-    single device, shard_map over a ``workers`` mesh axis otherwise."""
-    V = gdev["v_life"].shape[0]
-    n2e = gdev["t_dst"].shape[0]
-    if n_devices <= 1:
-        cnt_w, arrivals_w = _local_hop(
-            sv_global, wmask, evalid, pdev["own_ids"], pdev["edge_ids"],
-            pdev["dst_local"], pdev["halo_ids"], pdev["src_halo"], mode)
-        return _publish(cnt_w, arrivals_w, pdev, n2e, V)
-
+def _shard_map_call(n_devices: int, shard_fn, wargs, rargs):
+    """Run ``shard_fn(*wargs, *rargs)`` under shard_map over a ``workers``
+    mesh axis: worker-axis args sharded, the rest replicated."""
     from jax.sharding import Mesh, PartitionSpec as P
     try:  # moved out of experimental in newer jax
         from jax import shard_map
@@ -155,30 +190,114 @@ def _run_hop(gdev, pdev, sv_global, wmask, evalid, mode, n_devices: int):
     # from the signature, not from where the import succeeded
     rep_kw = ("check_vma" if "check_vma" in
               inspect.signature(shard_map).parameters else "check_rep")
-
     mesh = Mesh(np.asarray(jax.devices()[:n_devices]), ("workers",))
-    wspec = P("workers")
-    rspec = P()
+    wspec, rspec = P("workers"), P()
+    out = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=tuple([wspec] * len(wargs) + [rspec] * len(rargs)),
+        out_specs=rspec,
+        **{rep_kw: False},
+    )(*wargs, *rargs)
+    return out
+
+
+def _run_hop(gdev, pdev, sv_global, wmask, evalid, mode, n_devices: int,
+             mch_global=None, minmax_op: int = Q.AGG_MIN):
+    """Dispatch one hop's local compute over the worker axis: plain vmap on a
+    single device, shard_map over a ``workers`` mesh axis otherwise."""
+    V = gdev["v_life"].shape[0]
+    n2e = gdev["t_dst"].shape[0]
+    if n_devices <= 1:
+        cnt_w, arrivals_w, mch_w = _local_hop(
+            sv_global, wmask, evalid, pdev["own_ids"], pdev["edge_ids"],
+            pdev["dst_local"], pdev["halo_ids"], pdev["src_halo"], mode,
+            mch_global, minmax_op)
+        return _publish(cnt_w, arrivals_w, pdev, n2e, V,
+                        mch_w=mch_w, minmax_op=minmax_op)
+
     bedges = SS.current_bedges()
+    with_mch = mch_global is not None
 
     def shard_fn(own_ids, edge_ids, dst_local, halo_ids, src_halo,
-                 sv_g, wm, ev, be):
+                 sv_g, wm, ev, mch_g, be):
         with SS.bucket_scope(be):
-            cnt_w, arr_w = _local_hop(sv_g, wm, ev, own_ids, edge_ids,
-                                      dst_local, halo_ids, src_halo, mode)
+            cnt_w, arr_w, mch_w = _local_hop(
+                sv_g, wm, ev, own_ids, edge_ids, dst_local, halo_ids,
+                src_halo, mode, mch_g if with_mch else None, minmax_op)
             sub = dict(own_ids=own_ids, edge_ids=edge_ids)
-            return _publish(cnt_w, arr_w, sub, n2e, V, psum_axis="workers")
+            cnt_g, arr_g, mch_out = _publish(
+                cnt_w, arr_w, sub, n2e, V, psum_axis="workers",
+                mch_w=mch_w, minmax_op=minmax_op)
+            if mch_out is None:
+                mch_out = jnp.zeros((), jnp.float32)
+            return cnt_g, arr_g, mch_out
 
     be = bedges if bedges is not None else jnp.zeros((1,), jnp.int32)
-    return shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(wspec, wspec, wspec, wspec, wspec, rspec, rspec, rspec,
-                  rspec),
-        out_specs=(rspec, rspec),
-        **{rep_kw: False},
-    )(pdev["own_ids"], pdev["edge_ids"], pdev["dst_local"],
-      pdev["halo_ids"], pdev["src_halo"], sv_global, wmask,
-      evalid if evalid is not None else jnp.zeros((n2e,), jnp.float32), be)
+    cnt_g, arr_g, mch_out = _shard_map_call(
+        n_devices, shard_fn,
+        (pdev["own_ids"], pdev["edge_ids"], pdev["dst_local"],
+         pdev["halo_ids"], pdev["src_halo"]),
+        (sv_global, wmask,
+         evalid if evalid is not None else jnp.zeros((n2e,), jnp.float32),
+         mch_global if with_mch else jnp.zeros((), jnp.float32), be))
+    return cnt_g, arr_g, (mch_out if with_mch else None)
+
+
+# =========================================================================
+# ETR hop: per-worker rank-summary production + exchange
+# =========================================================================
+def _ranks_for_produced(gdev, pdev):
+    """Gather the global rank tables at each worker's produced edges:
+    [W, 4, Smax]; pads read the appended zero row."""
+    ranks_t = gdev["etr_dep_ranks"].T                       # [2E, 4]
+    return jnp.swapaxes(_shard_rows(ranks_t, pdev["etr_src_eids"]), 1, 2)
+
+
+def _worker_etr_summaries(cnt_w, perm_ls, perm_le, base, seg_len, ranks,
+                          op: int, backward: bool):
+    """Single-worker ETR producer: reorder owned prev-hop counts by the
+    per-worker (dst, stat) permutations, take segment-local prefix sums, and
+    emit the rank summaries for every edge whose source segment it owns."""
+    cnt_pad = jnp.concatenate(
+        [cnt_w, jnp.zeros((1,) + cnt_w.shape[1:], cnt_w.dtype)], axis=0)
+    cps = cnt_pad[perm_ls]
+    cpe = cnt_pad[perm_le] if SS.etr_needs_end(op, backward) else None
+    return SS.etr_local_summaries(cps, cpe, base, seg_len, ranks, op, backward)
+
+
+def _etr_summaries(gdev, pdev, arrivals_e, op: int, backward: bool,
+                   n_devices: int):
+    """The ETR boundary exchange: owners produce per-edge rank summaries from
+    local prefix tables; the scatter to the global [2E, *TS] view simulates
+    the sends.  Only summaries whose consumer is another worker are real
+    cross-partition traffic (PartitionArrays.etr_exchange_volume)."""
+    n2e = gdev["t_dst"].shape[0]
+    ranks_w = _ranks_for_produced(gdev, pdev)
+    if n_devices <= 1:
+        cnt_w = _shard_rows(arrivals_e, pdev["edge_ids"])   # owner-local view
+        out_w = jax.vmap(
+            lambda c, pls, ple, b, sl, r: _worker_etr_summaries(
+                c, pls, ple, b, sl, r, op, backward)
+        )(cnt_w, pdev["etr_perm_local_s"], pdev["etr_perm_local_e"],
+          pdev["etr_src_base"], pdev["etr_src_len"], ranks_w)
+        return _scatter_rows(out_w, pdev["etr_src_eids"], n2e)
+
+    def shard_fn(edge_ids, perm_ls, perm_le, base, seg_len, ranks, src_eids,
+                 arr_e):
+        cnt_w = _shard_rows(arr_e, edge_ids)
+        out_w = jax.vmap(
+            lambda c, pls, ple, b, sl, r: _worker_etr_summaries(
+                c, pls, ple, b, sl, r, op, backward)
+        )(cnt_w, perm_ls, perm_le, base, seg_len, ranks)
+        summ = _scatter_rows(out_w, src_eids, n2e)
+        return jax.lax.psum(summ, "workers")
+
+    return _shard_map_call(
+        n_devices, shard_fn,
+        (pdev["edge_ids"], pdev["etr_perm_local_s"], pdev["etr_perm_local_e"],
+         pdev["etr_src_base"], pdev["etr_src_len"], ranks_w,
+         pdev["etr_src_eids"]),
+        (arrivals_e,))
 
 
 # =========================================================================
@@ -202,8 +321,6 @@ def run_segment_partitioned(
 ) -> SegmentResult:
     """Partitioned twin of engine.run_segment; arrivals returned in GLOBAL
     space so the shared plan/join skeleton applies unchanged."""
-    if with_minmax:
-        raise NotImplementedError("min/max aggregation on the partitioned path")
     V = gdev["v_life"].shape[0]
     stats: List[dict] = []
     bedges = SS.current_bedges()
@@ -217,6 +334,11 @@ def run_segment_partitioned(
     sv_global = SS.init_state(vm, vv, mode, n_buckets)
     stats.append(dict(phase="init", matched=jnp.sum(vm)))
 
+    mch_global = None   # global [V] view of the extremum channel
+    if with_minmax:
+        vals0, _ = minmax_col
+        mch_global = SS.minmax_seed(sv_global, vals0, minmax_op, mode)
+
     arrivals_e = None   # global [2E, *TS] view of the last hop's messages
     arrivals_v = None   # global [V, *TS] view of the last delivery
     for i, ep in enumerate(e_preds):
@@ -229,10 +351,15 @@ def run_segment_partitioned(
                 mode, bedges,
             )
         if ep.etr_op != -1:
-            # ETR hop: owners' per-segment rank prefixes over the previous
-            # per-edge messages, applied at the current edges' sources.
-            src_cnt = SS.etr_weighted(gdev, arrivals_e, ep.etr_op, backward,
-                                      use_arr=False)
+            if with_minmax:
+                raise NotImplementedError(
+                    "min/max aggregation across ETR hops")
+            # ETR hop: segment owners produce rank summaries from LOCAL
+            # prefix tables; only boundary summaries cross partitions.
+            src_cnt = _etr_summaries(gdev, pdev, arrivals_e, ep.etr_op,
+                                     backward, n_devices)
+            # intermediate vertex predicate at the current edges' sources
+            # (replicated elementwise compute, no exchange)
             if mode == MODE_STATIC:
                 sv_edges = src_cnt * vm[gdev["t_src"]].astype(jnp.float32)
             elif mode == MODE_BUCKET:
@@ -241,8 +368,7 @@ def run_segment_partitioned(
             else:
                 sv_edges = SS.apply_validity(src_cnt, vm[gdev["t_src"]],
                                              vv[gdev["t_src"]], mode)
-            # the per-edge source values ARE the exchanged state here; local
-            # compute reduces to edge apply + delivery on the owned slice.
+            # consumer side: edge apply + delivery on the owned slice.
             ew = _shard_rows(sv_edges, pdev["edge_ids"])
             W, Emax = pdev["edge_ids"].shape
             v_max = pdev["own_ids"].shape[1]
@@ -255,16 +381,17 @@ def run_segment_partitioned(
             cnt_w = cnt.reshape((W, Emax) + cnt.shape[1:])
             arr_w = jax.vmap(lambda c, d: SS.deliver(c, d, v_max + 1))(
                 cnt_w, pdev["dst_local"])[:, :v_max]
-            arrivals_e, arrivals_v = _publish(cnt_w, arr_w, pdev,
-                                              gdev["t_dst"].shape[0], V)
+            arrivals_e, arrivals_v, _ = _publish(cnt_w, arr_w, pdev,
+                                                 gdev["t_dst"].shape[0], V)
         else:
             if i > 0:
                 sv_global = SS.apply_validity(arrivals_v, vm, vv, mode)
-            arrivals_e, arrivals_v = _run_hop(gdev, pdev, sv_global, wmask,
-                                              evalid, mode, n_devices)
+            arrivals_e, arrivals_v, mch_global = _run_hop(
+                gdev, pdev, sv_global, wmask, evalid, mode, n_devices,
+                mch_global, minmax_op)
         stats.append(dict(phase=f"hop{i}", matched_edges=jnp.sum(wmask)))
 
-    return SegmentResult(arrivals_e, arrivals_v, stats, None)
+    return SegmentResult(arrivals_e, arrivals_v, stats, mch_global)
 
 
 # =========================================================================
@@ -320,8 +447,6 @@ def execute(
     When >1 JAX devices exist and divide ``n_workers``, the worker axis runs
     under shard_map on a device mesh; otherwise it is vmapped on one device.
     """
-    if qry.agg_op in (Q.AGG_MIN, Q.AGG_MAX):
-        raise NotImplementedError("min/max aggregates on the partitioned path")
     if split is None:
         split = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1
     gdev = _prepare_gdev(graph)
@@ -338,13 +463,13 @@ def execute(
             runner = partial(run_segment_partitioned, gd, pd, n_devices)
             out = execute_plan_traced(gd, qry, split, mode, n_buckets, params,
                                       be, segment_runner=runner)
-            return out.total, out.per_vertex
+            return out.total, out.per_vertex, out.minmax
 
         fn = jax.jit(traced)
         _JIT_CACHE[key] = fn
     params = jnp.asarray(Q.query_params(qry))
-    total, per_vertex = fn(gdev, pdev, params, bedges)
-    return ExecOutput(total, per_vertex, None, [])
+    total, per_vertex, minmax = fn(gdev, pdev, params, bedges)
+    return ExecOutput(total, per_vertex, minmax, [])
 
 
 def count_results(graph, qry, **kw) -> float:
@@ -403,16 +528,15 @@ def _profile_fns(qry: Q.PathQuery, mode: int, n_buckets: int, v_max: int,
                                                  pe[i], mode, be)
         return jax.jit(f)
 
-    def etr_sources(i):
-        def f(gd, prev_e, m, v, be, _op=qry.e_preds[i].etr_op):
+    def etr_mask(i):
+        def f(gd, summ, m, v, be):
             with SS.bucket_scope(be):
-                sc = SS.etr_weighted(gd, prev_e, _op, False, use_arr=False)
                 if mode == MODE_STATIC:
-                    return sc * m[gd["t_src"]].astype(jnp.float32)
+                    return summ * m[gd["t_src"]].astype(jnp.float32)
                 if mode == MODE_BUCKET:
-                    return sc * (m[:, None] & v)[gd["t_src"]].astype(
+                    return summ * (m[:, None] & v)[gd["t_src"]].astype(
                         jnp.float32)
-                return SS.apply_validity(sc, m[gd["t_src"]], v[gd["t_src"]],
+                return SS.apply_validity(summ, m[gd["t_src"]], v[gd["t_src"]],
                                          mode)
         return jax.jit(f)
 
@@ -426,11 +550,25 @@ def _profile_fns(qry: Q.PathQuery, mode: int, n_buckets: int, v_max: int,
     @jax.jit
     def one_worker_hop(sv_g, wm, ev, own, eids, dloc, hids, shalo, be):
         with SS.bucket_scope(be):
-            return _local_hop(sv_g, wm, ev if ev.ndim else None, own, eids,
-                              dloc, hids, shalo, mode)
+            cnt_w, arr_w, _ = _local_hop(sv_g, wm, ev if ev.ndim else None,
+                                         own, eids, dloc, hids, shalo, mode)
+            return cnt_w, arr_w
 
-    # ETR-hop worker body: the gathered per-edge source values are the
-    # exchanged state; the local part is edge apply + delivery.
+    # ETR producer body: segment-local prefix tables over the worker's owned
+    # prev-hop counts → rank summaries for the edges whose source it owns.
+    def etr_produce(i):
+        op = qry.e_preds[i].etr_op
+
+        def f(arr_e, eids, pls, ple, base, slen, ranks, be, _backward=False):
+            with SS.bucket_scope(be):
+                cnt_w = _shard_rows(arr_e, eids)[0]
+                return _worker_etr_summaries(cnt_w, pls[0], ple[0], base[0],
+                                             slen[0], ranks[0], op,
+                                             _backward)[None]
+        return jax.jit(f)
+
+    # ETR consumer body: the received summaries are the exchanged state; the
+    # local part is edge apply + delivery.
     @jax.jit
     def one_worker_etr(sved, wm, ev, eids, dloc, be):
         with SS.bucket_scope(be):
@@ -456,7 +594,9 @@ def _profile_fns(qry: Q.PathQuery, mode: int, n_buckets: int, v_max: int,
     fns = dict(
         vpred=[vpred(i) for i in range(qry.n_vertices)],
         hop_masks=[hop_masks(i) for i in range(len(qry.e_preds))],
-        etr_sources=[etr_sources(i) if ep.etr_op != -1 else None
+        etr_mask=[etr_mask(i) if ep.etr_op != -1 else None
+                  for i, ep in enumerate(qry.e_preds)],
+        etr_produce=[etr_produce(i) if ep.etr_op != -1 else None
                      for i, ep in enumerate(qry.e_preds)],
         apply_vv=apply_vv,
         one_worker_hop=one_worker_hop,
@@ -482,9 +622,12 @@ def measure_supersteps(
     Runs the left-to-right plan (split = n−1) hop by hop, executing each
     worker's local compute SEPARATELY through one compiled single-worker hop
     function and timing it with block_until_ready — the per-(hop, worker)
-    wall times a real deployment's straggler/makespan comes from.  The
-    exchange (scatter/halo republish) runs between timings, untimed, with its
-    volume reported from the halo ghost counts.
+    wall times a real deployment's straggler/makespan comes from.  ETR hops
+    time both the producer (segment-local rank-summary prefix tables) and
+    consumer (edge apply + delivery) halves per worker.  The exchange
+    (scatter/halo republish) runs between timings, untimed; its volume is
+    the halo ghost count on plain hops and the boundary rank-summary count
+    (``PartitionArrays.etr_exchange_volume``) on ETR hops.
     """
     assert qry.agg_op == Q.AGG_NONE, "profile plain path counts"
     gdev = _prepare_gdev(graph)
@@ -504,7 +647,9 @@ def measure_supersteps(
     vpred, hop_masks = fns["vpred"], fns["hop_masks"]
     apply_vv, one_worker_hop = fns["apply_vv"], fns["one_worker_hop"]
     one_worker_etr, init_fn = fns["one_worker_etr"], fns["init_fn"]
-    etr_sources, total_fn = fns["etr_sources"], fns["total_fn"]
+    etr_mask, etr_produce = fns["etr_mask"], fns["etr_produce"]
+    total_fn = fns["total_fn"]
+    ranks_w = _ranks_for_produced(gdev, pdev)
 
     def _timed(fn, *args):
         best, out = np.inf, None
@@ -532,17 +677,32 @@ def measure_supersteps(
             vm, vv = vpred[i](gdev, params, bedges)
         cnt_rows, arr_rows = [], []
         if ep.etr_op != -1:
-            # rank-prefix exchange computed by the segment owners (a global
-            # step in this simulation, untimed); the whole frontier counts
-            # as boundary traffic — an upper bound on the real exchange.
-            sv_edges = etr_sources[i](gdev, arrivals_e, vm, vv, bedges)
-            exchange[i] = int(arrays.n_edges.sum())
+            # rank-prefix exchange: each owner's summary production over its
+            # LOCAL prefix tables is timed as part of that worker's superstep;
+            # only the boundary summaries (producer ≠ consumer) count as
+            # cross-partition traffic — O(cut edges), not O(frontier).
+            summ_rows = []
+            for w in range(W):
+                t_prod, ow = _timed(
+                    etr_produce[i], arrivals_e,
+                    pdev["edge_ids"][w: w + 1],
+                    pdev["etr_perm_local_s"][w: w + 1],
+                    pdev["etr_perm_local_e"][w: w + 1],
+                    pdev["etr_src_base"][w: w + 1],
+                    pdev["etr_src_len"][w: w + 1],
+                    ranks_w[w: w + 1], bedges)
+                times[i, w] = t_prod
+                summ_rows.append(ow)
+            summ = _scatter_rows(jnp.concatenate(summ_rows, axis=0),
+                                 pdev["etr_src_eids"], n2e)
+            sv_edges = etr_mask[i](gdev, summ, vm, vv, bedges)
+            exchange[i] = int(arrays.n_src_ghost.sum())
             for w in range(W):
                 t_best, (cw, aw) = _timed(
                     one_worker_etr, sv_edges, wmask, ev_arg,
                     pdev["edge_ids"][w: w + 1], pdev["dst_local"][w: w + 1],
                     bedges)
-                times[i, w] = t_best
+                times[i, w] += t_best
                 cnt_rows.append(cw)
                 arr_rows.append(aw)
         else:
@@ -560,7 +720,7 @@ def measure_supersteps(
                 arr_rows.append(aw)
         cnt_w = jnp.concatenate(cnt_rows, axis=0)
         arr_w = jnp.concatenate(arr_rows, axis=0)
-        arrivals_e, arrivals_v = _publish(cnt_w, arr_w, pdev, n2e, V)
+        arrivals_e, arrivals_v, _ = _publish(cnt_w, arr_w, pdev, n2e, V)
 
     # final join: apply the last vertex predicate, total (sanity value)
     vmf, vvf = vpred[qry.n_vertices - 1](gdev, params, bedges)

@@ -258,15 +258,19 @@ def _inner(gdev, qry, split, mode, n_buckets, params, sb):
 
     if n == 1:
         st = SS.init_state(vm, vv, mode, n_buckets)
-        return ExecOutput(SS.state_total(st, mode), st if want_agg else None,
-                          None, [])
+        pv = None
+        if want_agg:
+            pv = st if mode != MODE_INTERVAL else SS.cells_to_buckets(st)
+        return ExecOutput(SS.state_total(st, mode), pv, None, [])
 
     if not etr_at_join:
         if left is None:
             Rv = vapply(right.arrivals_v)
             if want_agg:
                 total = SS.state_total(Rv, mode)
-                return ExecOutput(total, Rv, None, [])
+                # interval cells flatten to per-bucket series, as dense does
+                pv = Rv if mode != MODE_INTERVAL else SS.cells_to_buckets(Rv)
+                return ExecOutput(total, pv, None, [])
             return ExecOutput(SS.state_total(Rv, mode), None, None, [])
         if right is None:
             Lv = vapply(left.arrivals_v)

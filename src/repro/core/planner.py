@@ -27,13 +27,17 @@ Two pieces:
      θ_net · m_net_i
 
    is added, where ``m_net_i`` is the STRUCTURAL boundary volume of that
-   superstep — the partitioner's halo ghost-entry count for plain hops, the
-   full traversal frontier for ETR hops (whose rank-prefix tables ship the
-   whole frontier) — exactly the volume the partitioned executor exchanges
-   and the volume θ_net is fitted against from measured partitioned
-   supersteps (engine_partitioned.measure_supersteps), keeping the model,
-   the fit and the executor in one unit (paper Sec. 5's communication
-   phase).
+   superstep — the partitioner's halo ghost-entry count for plain hops
+   (doubled when the MIN/MAX extremum channel rides the exchange), the
+   boundary rank-summary count for ETR hops (cut edges, whose producers'
+   per-segment prefix tables live with the source-segment owner) — exactly
+   the volume the partitioned executor exchanges and the volume θ_net is
+   fitted against from measured partitioned supersteps
+   (engine_partitioned.measure_supersteps), keeping the model, the fit and
+   the executor in one unit (paper Sec. 5's communication phase).  Every
+   query class (plain counts, COUNT and MIN/MAX aggregates, ETR hops) is
+   costed on the distributed path — plan selection has no dense-only
+   fallback.
 
 What matters (paper Sec. 5): not absolute accuracy but *discriminating good
 plans from bad*.
@@ -142,12 +146,15 @@ def estimate_segment(
     trav_arrivals_by_type: np.ndarray,
     n_workers: int = 1,
     exchange_volume: float = 0.0,
-    frontier_volume: float = 0.0,
+    etr_exchange_volume: float = 0.0,
+    extremum_channel: bool = False,
 ) -> List[StepEstimate]:
     """Per-superstep estimates.  With ``n_workers > 1`` compute extents are
     divided over workers (balanced partitions) and each hop pays the θ_net
-    exchange term: ``exchange_volume`` (halo ghost entries) on plain hops,
-    ``frontier_volume`` (the full 2E traversal frontier) on ETR hops."""
+    exchange term: ``exchange_volume`` (halo ghost entries; doubled when the
+    MIN/MAX ``extremum_channel`` rides along) on plain hops,
+    ``etr_exchange_volume`` (boundary rank summaries — cut edges) on ETR
+    hops."""
     steps: List[StepEstimate] = []
     prev_m_e = None
     w = max(1, int(n_workers))
@@ -185,11 +192,14 @@ def estimate_segment(
             else float(trav_arrivals_by_type.sum())
         )
         # structural boundary volume of this hop: what the executor actually
-        # exchanges (and what θ_net was fitted on) — ETR hops ship the whole
-        # frontier's prefix tables (see engine_partitioned)
+        # exchanges (and what θ_net was fitted on) — ETR hops ship only the
+        # boundary rank summaries of cut segments (see engine_partitioned)
         m_net = 0.0
         if w > 1:
-            m_net = frontier_volume if ep.etr_op != -1 else exchange_volume
+            if ep.etr_op != -1:
+                m_net = etr_exchange_volume
+            else:
+                m_net = exchange_volume * (2.0 if extremum_channel else 1.0)
         t = (
             coeffs["theta0"]
             + ((coeffs["theta_init"] if i == 0 else coeffs["theta_v"]) * V_sigma
@@ -217,7 +227,7 @@ class Planner:
         self.n_workers = 1
         self.cut_frac = 0.0
         self.exchange_volume = 0.0
-        self.frontier_volume = 0.0
+        self.etr_exchange_volume = 0.0
         if partitioning is not None:
             arrays = partitioning
             if not hasattr(arrays, "exchange_volume"):  # a Partitioning
@@ -226,7 +236,7 @@ class Planner:
             self.n_workers = int(arrays.n_workers)
             self.cut_frac = float(arrays.stats.get("edge_cut", 0.0))
             self.exchange_volume = float(arrays.exchange_volume())
-            self.frontier_volume = float(2 * graph.n_edges)
+            self.etr_exchange_volume = float(arrays.etr_exchange_volume())
         # traversal arrivals per vertex type (edge extent of a typed hop)
         deg = graph.in_degree.astype(np.int64) + graph.out_degree.astype(np.int64)
         self.trav_arrivals_by_type = np.zeros(graph.n_vertex_types, np.int64)
@@ -240,13 +250,16 @@ class Planner:
     def estimate(self, qry: Q.PathQuery, split: int) -> PlanEstimate:
         n = qry.n_vertices
         steps: List[StepEstimate] = []
+        # MIN/MAX aggregates thread the extremum channel through the (right,
+        # reversed) segment; its boundary state rides every plain exchange.
+        extremum = qry.agg_op in (Q.AGG_MIN, Q.AGG_MAX)
         if split > 0:
             steps += estimate_segment(
                 self.stats, qry.v_preds[: split + 1], qry.e_preds[:split],
                 self.coeffs, self.trav_arrivals_by_type,
                 n_workers=self.n_workers,
                 exchange_volume=self.exchange_volume,
-                frontier_volume=self.frontier_volume,
+                etr_exchange_volume=self.etr_exchange_volume,
             )
         if (n - 1) - split > 0:
             rev = qry.reversed()
@@ -256,7 +269,8 @@ class Planner:
                 self.coeffs, self.trav_arrivals_by_type,
                 n_workers=self.n_workers,
                 exchange_volume=self.exchange_volume,
-                frontier_volume=self.frontier_volume,
+                etr_exchange_volume=self.etr_exchange_volume,
+                extremum_channel=extremum,
             )
         t = sum(s.t_ms for s in steps)
         return PlanEstimate(split, t, steps)

@@ -16,11 +16,19 @@ all three:
   edge masking           direction_mask(),
                          edge_predicate_weights() — edge predicate ∧ direction
   state algebra          init_state(), apply_validity(), apply_edge(),
-                         state_total(), cells_to_buckets()
+                         state_total(), state_alive(), cells_to_buckets()
   ETR rank application   etr_weighted()          — rank tables + segment prefix
                                                    sums (exact, O(E) per hop)
+                         etr_local_summaries()   — the same contraction from
+                                                   SEGMENT-LOCAL prefix tables
+                                                   (the partitioned executor's
+                                                   rank-summary exchange)
   delivery               deliver()               — sorted segment-sum of
                                                    per-edge counts by arrival
+  extremum channel       minmax_seed(), minmax_edge(), deliver_extremum()
+                         — the MIN/MAX aggregate's per-hop DP channel
+                           (segment_min/segment_max delivery; the partitioned
+                           executor exchanges it alongside the count state)
   joins                  join_interval_counts(), join_interval_counts_edges()
 
 Temporal modes (shared by all executors):
@@ -33,9 +41,11 @@ Temporal modes (shared by all executors):
 State layout contract: every state/count tensor has the entity axis FIRST
 (vertices, traversal edges, or padded per-worker slots) and the temporal-state
 axes last.  All primitives here are elementwise over the entity axis except
-``deliver`` (segment reduction) and ``etr_weighted`` (segment prefix sums),
+``deliver``/``deliver_extremum`` (segment reductions) and the ETR prefix sums,
 which is exactly what makes the partitioned executor possible: elementwise
-steps shard trivially, the two segment steps define the communication pattern.
+steps shard trivially, the segment steps define the communication pattern
+(and, because arrival segments never straddle workers, they all decompose
+into per-worker segment ops + a boundary exchange).
 
 Bucket edges are threaded through traces with the ``bucket_scope`` context
 manager (a trace-scoped stack, not a function argument, so deeply nested
@@ -48,6 +58,7 @@ from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import intervals as iv
 from . import query as Q
@@ -318,6 +329,15 @@ def state_total(state, mode):
     return jnp.sum(_mask_valid_cells(state))
 
 
+def state_alive(state, mode):
+    """bool[N]: entities whose count state is non-zero anywhere (static
+    scalar, any bucket, or any interval cell) — the liveness gate of the
+    extremum channel."""
+    if mode == MODE_STATIC:
+        return state > 0
+    return state.sum(axis=tuple(range(1, state.ndim))) > 0
+
+
 def cells_to_buckets(state):
     """[N,B,B+1] running-interval cells → [N,B] per-bucket time series."""
     B = state.shape[-2]
@@ -345,6 +365,39 @@ def deliver(cnt_e, seg_ids, num_segments: int, indices_are_sorted: bool = True):
 
 
 # =========================================================================
+# extremum (MIN/MAX aggregate) channel
+# =========================================================================
+def minmax_neutral(op: int):
+    """The aggregation-neutral element of the extremum channel."""
+    return jnp.float32(np.inf if op == Q.AGG_MIN else -np.inf)
+
+
+def minmax_seed(state, col_vals, op: int, mode: int):
+    """Seed the per-entity extremum channel from the aggregate's property
+    column: the first-slot value where the count state is alive, neutral
+    elsewhere."""
+    base = col_vals[:, 0].astype(jnp.float32)
+    return jnp.where(state_alive(state, mode), base, minmax_neutral(op))
+
+
+def minmax_edge(mch_src, cnt_e, op: int, mode: int):
+    """Per-edge extremum message: the source channel where the edge carries
+    any live count, neutral elsewhere (so dead/pad edges cannot win)."""
+    return jnp.where(state_alive(cnt_e, mode), mch_src, minmax_neutral(op))
+
+
+def deliver_extremum(m_e, seg_ids, num_segments: int, op: int,
+                     indices_are_sorted: bool = True):
+    """Extremum twin of ``deliver``: sorted segment_min/segment_max of the
+    per-edge channel by arrival vertex.  Min/max is order-independent, so
+    per-worker deliveries over owned segments match the dense delivery
+    exactly."""
+    seg = jax.ops.segment_min if op == Q.AGG_MIN else jax.ops.segment_max
+    return seg(m_e, seg_ids, num_segments=num_segments,
+               indices_are_sorted=indices_are_sorted)
+
+
+# =========================================================================
 # ETR prefix machinery
 # =========================================================================
 def etr_weighted(gdev, cnt_e_prev, op: int, backward: bool, use_arr: bool):
@@ -361,7 +414,7 @@ def etr_weighted(gdev, cnt_e_prev, op: int, backward: bool, use_arr: bool):
     zero = jnp.zeros((1,) + trailing, cnt_e_prev.dtype)
 
     S_s = jnp.concatenate([zero, jnp.cumsum(cnt_e_prev[perm_s], axis=0)], axis=0)
-    need_end = any(t == 3 for _, t in terms)
+    need_end = etr_needs_end(op, backward)
     S_e = (
         jnp.concatenate([zero, jnp.cumsum(cnt_e_prev[perm_e], axis=0)], axis=0)
         if need_end
@@ -378,6 +431,55 @@ def etr_weighted(gdev, cnt_e_prev, op: int, backward: bool, use_arr: bool):
         base = (S_e[base_pos] if term == 3 else base_s)
         val = S[base_pos + ranks[term]] - base
         out = out + sign * val
+    return out
+
+
+def etr_needs_end(op: int, backward: bool) -> bool:
+    """Does this ETR spec read the (dst, life-end)-ordered prefix table?"""
+    _, terms = ETR_SPECS[(op, backward)]
+    return any(t == 3 for _, t in terms)
+
+
+def etr_local_summaries(cnt_perm_s, cnt_perm_e, base, seg_len, ranks,
+                        op: int, backward: bool):
+    """Per-edge ETR rank summaries from SEGMENT-LOCAL prefix tables.
+
+    The contraction of ``etr_weighted`` only ever takes prefix DIFFERENCES
+    inside one arrival segment, so a worker owning whole segments can compute
+    it from prefix sums over just its own prev-hop counts — this function is
+    that local step, and its outputs are exactly the per-edge values the
+    partitioned executor exchanges (boundary rank summaries) on ETR hops.
+
+      cnt_perm_s  [K, *TS] — owned prev-hop counts in (dst, life-start) order
+      cnt_perm_e  [K, *TS] — same in (dst, life-end) order; may be None when
+                             ``not etr_needs_end(op, backward)``
+      base        int32[S] — local prefix index of each produced edge's
+                             source-segment base (0 ≤ base ≤ K)
+      seg_len     int32[S] — that segment's length (base + seg_len ≤ K)
+      ranks       int32[4, S] — the global rank tables gathered at the
+                             produced edges (within-segment offsets)
+
+    Returns [S, *TS] summaries; pad rows (base = len = ranks = 0) return 0.
+    Matches ``etr_weighted`` exactly whenever the count sums are exactly
+    representable (all engine counts are small integers in float32).
+    """
+    alpha, terms = ETR_SPECS[(op, backward)]
+    trailing = cnt_perm_s.shape[1:]
+    zero = jnp.zeros((1,) + trailing, cnt_perm_s.dtype)
+    S_s = jnp.concatenate([zero, jnp.cumsum(cnt_perm_s, axis=0)], axis=0)
+    S_e = (
+        jnp.concatenate([zero, jnp.cumsum(cnt_perm_e, axis=0)], axis=0)
+        if cnt_perm_e is not None
+        else None
+    )
+    base_s = S_s[base]
+    out = 0.0
+    if alpha:
+        out = alpha * (S_s[base + seg_len] - base_s)
+    for sign, term in terms:
+        S = S_e if term == 3 else S_s
+        b0 = S_e[base] if term == 3 else base_s
+        out = out + sign * (S[base + ranks[term]] - b0)
     return out
 
 

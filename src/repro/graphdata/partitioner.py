@@ -139,10 +139,12 @@ def _edge_cut(graph: TemporalGraph, part_of: np.ndarray) -> float:
 class PartitionArrays:
     """Padded per-worker execution tables for the partitioned executor.
 
-    Shapes: W = n_workers, Vmax/Emax/Hmax = padded per-worker extents.
+    Shapes: W = n_workers, Vmax/Emax/Hmax/Smax = padded per-worker extents.
     Padding sentinels: vertex ids pad with V, traversal-edge ids with 2E —
-    both index a synthetic zero row on device — and ``dst_local`` pads with
-    Vmax (a trash delivery segment that is sliced off).
+    both index a synthetic zero row on device — ``dst_local`` pads with Vmax
+    (a trash delivery segment that is sliced off) and ``src_halo`` pads with
+    Hmax (a synthetic zero slot appended to each worker's halo slice, so pad
+    edges can never alias a real halo vertex).
 
     Ownership invariants (asserted by ``build_partition_arrays``):
       * every vertex appears in exactly one worker's ``own_ids`` row;
@@ -150,6 +152,15 @@ class PartitionArrays:
         (the worker owning its arrival vertex), preserving canonical
         arrival-sorted order so per-worker segment-sum delivery reproduces
         the dense engine's summation order bit-for-bit.
+
+    ETR exchange tables: an ETR hop needs, per current edge e, prefix sums
+    over the arrival segment of its *source* vertex.  Those segment edges are
+    owned by worker(t_src[e]) — the tables below let that owner compute the
+    per-edge rank summary from purely local prefix tables (its owned prev-hop
+    counts reordered by the global (dst, lifespan-stat) permutations restrict
+    to per-worker permutations because every arrival segment lives whole on
+    one worker).  Only summaries for edges consumed by ANOTHER worker
+    (``n_src_ghost``) cross partitions — O(cut edges), not O(frontier).
     """
 
     n_workers: int
@@ -157,12 +168,23 @@ class PartitionArrays:
     edge_ids: np.ndarray   # int32[W, Emax] — owned traversal-edge ids, pad = 2E
     dst_local: np.ndarray  # int32[W, Emax] — arrival slot in own_ids, pad = Vmax
     halo_ids: np.ndarray   # int32[W, Hmax] — source vertices needed, pad = V
-    src_halo: np.ndarray   # int32[W, Emax] — per-edge slot into halo_ids, pad = 0
+    src_halo: np.ndarray   # int32[W, Emax] — per-edge slot into halo_ids, pad = Hmax
     owner_of_vertex: np.ndarray  # int32[V]
     n_own: np.ndarray      # int64[W] — real owned-vertex count
     n_edges: np.ndarray    # int64[W] — real owned-edge count
     n_halo: np.ndarray     # int64[W] — halo table size
     n_ghost: np.ndarray    # int64[W] — halo entries owned by ANOTHER worker
+    # ---- ETR rank-summary exchange tables
+    etr_perm_local_s: np.ndarray  # int32[W, Emax] — local slot of the j-th owned
+    #                               edge in global (dst, life-start) order, pad = Emax
+    etr_perm_local_e: np.ndarray  # int32[W, Emax] — same for (dst, life-end) order
+    etr_src_eids: np.ndarray      # int32[W, Smax] — edges whose SOURCE vertex this
+    #                               worker owns (it produces their summaries), pad = 2E
+    etr_src_base: np.ndarray      # int32[W, Smax] — local prefix index of the source
+    #                               segment's base in this worker's perm order, pad = 0
+    etr_src_len: np.ndarray       # int32[W, Smax] — source arrival-segment length, pad = 0
+    n_src: np.ndarray             # int64[W] — summaries produced per worker
+    n_src_ghost: np.ndarray       # int64[W] — summaries consumed by ANOTHER worker
     stats: Dict
 
     @property
@@ -177,9 +199,18 @@ class PartitionArrays:
     def h_max(self) -> int:
         return int(self.halo_ids.shape[1])
 
+    @property
+    def s_max(self) -> int:
+        return int(self.etr_src_eids.shape[1])
+
     def exchange_volume(self) -> int:
-        """Boundary messages per superstep: ghost-state entries received."""
+        """Boundary messages per plain superstep: ghost-state entries received."""
         return int(self.n_ghost.sum())
+
+    def etr_exchange_volume(self) -> int:
+        """Boundary messages per ETR superstep: rank summaries whose producer
+        (source-segment owner) differs from their consumer (edge owner)."""
+        return int(self.n_src_ghost.sum())
 
 
 def build_partition_arrays(
@@ -231,24 +262,72 @@ def build_partition_arrays(
             out[w, : r.shape[0]] = r
         return out
 
+    # ---- ETR rank-summary exchange tables.
+    # Arrival segments are whole per worker (edge ownership is by t_dst), so
+    # the global (dst, stat) permutations split into per-worker permutations
+    # over each worker's owned edges; within-segment order — and hence every
+    # within-segment prefix difference the rank machinery takes — is
+    # preserved exactly.  ``base_local[v]`` counts this worker's perm entries
+    # before v's segment (identical for the start- and end-stat orders, which
+    # only differ *inside* segments).
+    etr = graph.etr_tables
+    perm_s = etr.perm_start.astype(np.int64)
+    perm_e = etr.perm_end.astype(np.int64)
+    ptr = graph.traversal["arr_ptr"].astype(np.int64)
+    seg_len_v = np.diff(ptr)
+    src_owner = owner[t_src]
+    base_local = np.zeros(V, np.int64)
+    perm_locals_s: List[np.ndarray] = []
+    perm_locals_e: List[np.ndarray] = []
+    src_eids: List[np.ndarray] = []
+    src_bases: List[np.ndarray] = []
+    src_lens: List[np.ndarray] = []
+    n_src = np.zeros(W, np.int64)
+    n_src_ghost = np.zeros(W, np.int64)
+    eo_perm_s = edge_owner[perm_s]
+    eo_perm_e = edge_owner[perm_e]
+    for w in range(W):
+        own = owned[w]
+        lens = seg_len_v[own]
+        base_local[own] = np.concatenate(([0], np.cumsum(lens)[:-1]))
+        eidx = edges[w]
+        perm_locals_s.append(np.searchsorted(eidx, perm_s[eo_perm_s == w]))
+        perm_locals_e.append(np.searchsorted(eidx, perm_e[eo_perm_e == w]))
+        produced = np.where(src_owner == w)[0].astype(np.int64)  # ascending
+        src_eids.append(produced)
+        src_bases.append(base_local[t_src[produced]])
+        src_lens.append(seg_len_v[t_src[produced]])
+        n_src[w] = produced.shape[0]
+        n_src_ghost[w] = int((edge_owner[produced] != w).sum())
+    assert int(n_src.sum()) == n2e, "every edge's summary produced exactly once"
+    s_max = max(1, int(n_src.max()))
+
     arrays = PartitionArrays(
         n_workers=W,
         own_ids=_pad(owned, v_max, V),
         edge_ids=_pad(edges, e_max, n2e),
         dst_local=_pad(dst_locals, e_max, v_max),
         halo_ids=_pad(halos, h_max, V),
-        src_halo=_pad(src_halos, e_max, 0),
+        src_halo=_pad(src_halos, e_max, h_max),
         owner_of_vertex=owner,
         n_own=n_own,
         n_edges=n_edges,
         n_halo=n_halo,
         n_ghost=n_ghost,
+        etr_perm_local_s=_pad(perm_locals_s, e_max, e_max),
+        etr_perm_local_e=_pad(perm_locals_e, e_max, e_max),
+        etr_src_eids=_pad(src_eids, s_max, n2e),
+        etr_src_base=_pad(src_bases, s_max, 0),
+        etr_src_len=_pad(src_lens, s_max, 0),
+        n_src=n_src,
+        n_src_ghost=n_src_ghost,
         stats=dict(
             **part.stats,
             n_workers=W,
             edge_imbalance=float(n_edges.max() / max(n_edges.mean(), 1e-9)),
             ghost_frac=float(n_ghost.sum() / max(n_halo.sum(), 1)),
             exchange_volume=int(n_ghost.sum()),
+            etr_exchange_volume=int(n_src_ghost.sum()),
         ),
     )
     return arrays

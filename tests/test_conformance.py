@@ -1,0 +1,84 @@
+"""The conformance matrix as tier-1 tests (smoke scale; ci.sh runs the same
+matrix with CONFORMANCE_SCALE=ci: full worker sweep + all ETR operators)."""
+import numpy as np
+import pytest
+
+import conformance as C
+from repro.core import engine as E
+from repro.core import query as Q
+from repro.core.ref_engine import RefEngine
+
+# Parametrization must be collection-time static: list the names the matrix
+# generates (the ci-only ETR sweep is appended when the env says so).
+_SMOKE_NAMES = [
+    "plain-2hop", "plain-bidir", "etr-before", "etr-overlaps",
+    "agg-count", "agg-min", "agg-max", "agg-min-2hop", "etr-agg-count",
+    "empty-result", "single-vertex",
+]
+_CI_NAMES = ["etr-starts-before", "etr-after", "etr-starts-after"]
+CASE_NAMES = _SMOKE_NAMES + (_CI_NAMES if C.scale() == "ci" else [])
+
+
+@pytest.fixture(scope="module")
+def matrix(small_dynamic_graph):
+    cases = C.case_matrix(small_dynamic_graph)
+    assert set(CASE_NAMES) <= set(cases), "matrix drifted from CASE_NAMES"
+    return cases
+
+
+@pytest.fixture(scope="module")
+def oracle(small_dynamic_graph):
+    return RefEngine(small_dynamic_graph)
+
+
+@pytest.mark.parametrize("mode", C.ALL_MODES)
+@pytest.mark.parametrize("name", CASE_NAMES)
+def test_conformance_matrix(small_dynamic_graph, matrix, oracle, name, mode):
+    C.check_case(small_dynamic_graph, oracle, matrix[name], mode)
+
+
+def test_matrix_covers_acceptance_surface(matrix):
+    """MIN/MAX aggregates and ETR hops must run the full worker sweep, so the
+    matrix itself proves the acceptance combinations execute partitioned."""
+    for name, case in matrix.items():
+        if name.startswith(("agg-min", "agg-max", "etr-")):
+            assert case.workers == C.WORKERS_FULL, name
+    kinds = set()
+    for case in matrix.values():
+        kinds.add(("agg", case.qry.agg_op))
+        kinds.add(("etr", any(e.etr_op != -1 for e in case.qry.e_preds)))
+    assert {("agg", Q.AGG_COUNT), ("agg", Q.AGG_MIN), ("agg", Q.AGG_MAX),
+            ("agg", Q.AGG_NONE), ("etr", True), ("etr", False)} <= kinds
+
+
+def test_matrix_exercises_matches(small_dynamic_graph, matrix):
+    """The generated matrix must not be vacuous: most non-empty cases
+    produce results in static mode."""
+    nonzero = 0
+    for name, case in matrix.items():
+        if case.expect_empty:
+            continue
+        out = E.execute(small_dynamic_graph, case.qry, mode=E.MODE_STATIC,
+                        n_buckets=C.N_BUCKETS, sliced=False)
+        nonzero += float(np.sum(np.asarray(out.total))) > 0
+    assert nonzero >= 6, "conformance matrix queries mostly match nothing"
+
+
+def test_minmax_across_etr_rejected_everywhere(small_dynamic_graph):
+    """The one intentionally unsupported combination fails loudly (and
+    identically) on the dense AND partitioned paths."""
+    from repro.core import engine_partitioned as EP
+    b = small_dynamic_graph.meta["builder"]
+    vt, et, k = b.v_type_ids, b.e_type_ids, b.key_ids
+    qry = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(vt["person"]),
+                 Q.VertexPredicate(vt["person"]),
+                 Q.VertexPredicate(vt["post"])),
+        e_preds=(Q.EdgePredicate(et["follows"], Q.DIR_OUT),
+                 Q.EdgePredicate(et["created"], Q.DIR_OUT, etr_op=7),),
+        agg_op=Q.AGG_MIN, agg_key=k["length"],
+    )
+    with pytest.raises(NotImplementedError):
+        E.execute(small_dynamic_graph, qry, sliced=False)
+    with pytest.raises(NotImplementedError):
+        EP.execute(small_dynamic_graph, qry, n_workers=2)

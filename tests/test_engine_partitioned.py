@@ -1,8 +1,13 @@
 """Partitioned executor ≡ dense engine (bit-identical), partitioner arrays
-invariants, exchange accounting, and the distribution-aware cost model."""
+invariants, exchange accounting, and the distribution-aware cost model.
+
+Equivalence tests are thin wrappers over the shared four-way differential
+harness in ``conformance.py`` (which also runs its own generated matrix in
+``test_conformance.py``)."""
 import numpy as np
 import pytest
 
+import conformance as C
 from repro.core import engine as E
 from repro.core import engine_partitioned as EP
 from repro.graphdata.partitioner import (build_partition_arrays,
@@ -59,21 +64,17 @@ def test_partition_arrays_balanced_and_deterministic(medium_static_graph):
 
 # ---------------------------------------------------------------- parity
 def test_partitioned_equals_dense_all_modes(small_dynamic_graph):
-    """Acceptance: bit-identical totals for all modes × n_workers ∈ {2,4,8}."""
+    """Acceptance: bit-identical results for the LDBC workload templates,
+    all modes × n_workers ∈ {2,4,8} (thin wrapper over conformance)."""
     g = small_dynamic_graph
     wl = make_workload(g, n_per_template=1, seed=33)
     nonzero = 0
     for inst in wl:
         for mode in ALL_MODES:
-            want = np.asarray(
-                E.execute(g, inst.qry, mode=mode, n_buckets=8,
-                          sliced=False).total)
-            for w in WORKERS:
-                got = np.asarray(
-                    EP.execute(g, inst.qry, mode=mode, n_buckets=8,
-                               n_workers=w).total)
-                assert np.array_equal(got, want), (inst.template, mode, w)
-            nonzero += float(np.sum(want)) > 0
+            legs = C.engine_results(g, inst.qry, mode, workers=WORKERS,
+                                    n_buckets=8)
+            C.assert_engines_identical(legs, (inst.template, mode))
+            nonzero += float(np.sum(legs["dense"]["total"])) > 0
     assert nonzero >= 5  # the workload must actually exercise matches
 
 
@@ -81,30 +82,39 @@ def test_partitioned_all_splits(small_static_graph):
     g = small_static_graph
     inst = make_workload(g, templates=("Q4",), n_per_template=1, seed=7)[0]
     for split in range(inst.qry.n_vertices):
-        want = E.count_results(g, inst.qry, split=split, sliced=False)
-        got = EP.count_results(g, inst.qry, split=split, n_workers=4)
-        assert got == want, (split, got, want)
+        legs = C.engine_results(g, inst.qry, E.MODE_STATIC, workers=(4,),
+                                split=split)
+        C.assert_engines_identical(legs, ("Q4", split))
 
 
 def test_partitioned_count_aggregate(small_static_graph):
     g = small_static_graph
     inst = make_workload(g, templates=("Q2",), n_per_template=1, seed=5,
                          aggregate=True)[0]
-    dense = E.execute(g, inst.qry, sliced=False)
-    part = EP.execute(g, inst.qry, n_workers=4)
-    assert np.array_equal(np.asarray(dense.per_vertex),
-                          np.asarray(part.per_vertex))
+    legs = C.engine_results(g, inst.qry, E.MODE_STATIC, workers=(4,))
+    C.assert_engines_identical(legs, "Q2-agg")
 
 
-def test_partitioned_rejects_minmax(small_static_graph):
+def test_partitioned_minmax_aggregate(small_static_graph):
+    """MIN/MAX aggregates run partitioned, bit-identical to dense AND to the
+    oracle (static mode; thin wrapper over conformance)."""
     from repro.core import query as Q
+    from repro.core.ref_engine import RefEngine
     g = small_static_graph
-    inst = make_workload(g, templates=("Q2",), n_per_template=1, seed=5,
-                         aggregate=True)[0]
-    qry = Q.PathQuery(inst.qry.v_preds, inst.qry.e_preds, agg_op=Q.AGG_MIN,
-                      agg_key=0)
-    with pytest.raises(NotImplementedError):
-        EP.execute(g, qry, n_workers=2)
+    b = g.meta["builder"]
+    oracle = RefEngine(g)
+    for op in (Q.AGG_MIN, Q.AGG_MAX):
+        qry = Q.PathQuery(
+            v_preds=(Q.VertexPredicate(b.v_type_ids["person"]),
+                     Q.VertexPredicate(b.v_type_ids["post"])),
+            e_preds=(Q.EdgePredicate(b.e_type_ids["created"], Q.DIR_OUT),),
+            agg_op=op, agg_key=b.key_ids["length"],
+        )
+        for mode in ALL_MODES:
+            legs = C.engine_results(g, qry, mode, workers=WORKERS)
+            C.assert_engines_identical(legs, ("minmax", op, mode))
+            if mode == E.MODE_STATIC:
+                C.assert_oracle_aggregate(oracle, g, qry, mode, legs)
 
 
 # ------------------------------------------------------------ instrumented
@@ -122,6 +132,80 @@ def test_measure_supersteps_matches_dense(small_static_graph):
     assert (prof.exchange_msgs >= 0).all()
 
 
+def test_etr_exchange_scales_with_cut(small_static_graph):
+    """Acceptance: the ETR-hop exchange volume reported by measure_supersteps
+    is the boundary rank-summary count (cut segments' summaries), NOT the
+    full per-edge frontier the first implementation reassembled."""
+    g = small_static_graph
+    _, arrays, _ = EP.partition_for(g, 4, None)
+    frontier = 2 * g.n_edges
+    cut = arrays.etr_exchange_volume()
+    assert 0 < cut < frontier
+    inst = make_workload(g, templates=("Q4",), n_per_template=1, seed=7)[0]
+    prof = EP.measure_supersteps(g, inst.qry, n_workers=4, repeats=1)
+    assert prof.total == E.count_results(g, inst.qry, sliced=False)
+    etr_hops = [i for i, ep in enumerate(inst.qry.e_preds)
+                if ep.etr_op != -1]
+    assert etr_hops, "Q4 must carry ETR hops"
+    for i, ep in enumerate(inst.qry.e_preds):
+        if i in etr_hops:
+            assert prof.exchange_msgs[i] == cut      # summaries for cut edges
+            assert prof.exchange_msgs[i] < frontier  # … not the frontier
+        else:
+            assert prof.exchange_msgs[i] == arrays.exchange_volume()
+
+
+# ------------------------------------------------------- empty-ghost pads
+def _two_type_graph():
+    """Type-1 vertices have no edges at all, so with one sub-partition per
+    worker some workers own empty edge/halo/ghost sets — the regression
+    surface for the src_halo pad sentinel."""
+    from repro.core.graph import TemporalGraph
+    n0, n1 = 8, 4
+    V = n0 + n1
+    v_type = np.asarray([0] * n0 + [1] * n1, np.int32)
+    v_life = np.tile(np.asarray([[0, 100]], np.int32), (V, 1))
+    e_src = np.asarray([0, 1, 2, 3, 4, 5, 6, 7, 0, 2], np.int32)
+    e_dst = np.asarray([1, 2, 3, 4, 5, 6, 7, 0, 4, 6], np.int32)
+    e_type = np.zeros(len(e_src), np.int32)
+    e_life = np.tile(np.asarray([[10, 90]], np.int32), (len(e_src), 1))
+    return TemporalGraph(v_type, v_life, e_src, e_dst, e_type, e_life,
+                         vprops={}, eprops={}, n_vertex_types=2,
+                         n_edge_types=1, lifespan=(0, 100))
+
+
+def test_empty_ghost_partition_pads_cannot_alias(small_static_graph):
+    """src_halo pads index the per-worker sentinel slot (= Hmax), never halo
+    slot 0 — which aliases a real vertex whenever a halo is non-empty and is
+    plain wrong when a worker's ghost/halo set is empty."""
+    from repro.core import query as Q
+    g = _two_type_graph()
+    pa = build_partition_arrays(
+        g, partition_graph(g, n_workers=8, parts_per_type=4))
+    assert (pa.n_halo == 0).any(), "precondition: some worker has no halo"
+    for w in range(pa.n_workers):
+        pads = pa.src_halo[w, pa.n_edges[w]:]
+        assert (pads == pa.h_max).all(), w
+        # real entries stay in range
+        assert (pa.src_halo[w, : pa.n_edges[w]] < pa.n_halo[w]).all(), w
+    # executor parity on the graph with empty-halo workers (all modes)
+    qry = Q.PathQuery(
+        v_preds=(Q.VertexPredicate(0), Q.VertexPredicate(0),
+                 Q.VertexPredicate(0)),
+        e_preds=(Q.EdgePredicate(0, Q.DIR_OUT), Q.EdgePredicate(0, Q.DIR_OUT)),
+    )
+    for mode in ALL_MODES:
+        legs = C.engine_results(g, qry, mode, workers=(8,), n_buckets=4)
+        C.assert_engines_identical(legs, ("empty-ghost", mode))
+        assert float(np.sum(legs["dense"]["total"])) > 0
+    # the LDBC fixture keeps exercising the non-empty-halo path
+    pa2 = build_partition_arrays(
+        small_static_graph, partition_graph(small_static_graph, n_workers=4,
+                                            parts_per_type=4))
+    for w in range(4):
+        assert (pa2.src_halo[w, pa2.n_edges[w]:] == pa2.h_max).all()
+
+
 # ------------------------------------------------------------- shard_map
 def test_partitioned_shard_map_multi_device():
     """The worker axis lowers to a real device mesh (4 forced host devices)."""
@@ -137,6 +221,7 @@ import numpy as np, jax
 assert jax.device_count() == 4
 from repro.core import engine as E
 from repro.core import engine_partitioned as EP
+from repro.core import query as Q
 from repro.graphdata.ldbc import LdbcParams, generate_ldbc
 from repro.graphdata.queries import make_workload
 g = generate_ldbc(LdbcParams(n_persons=40, seed=5, dynamic=True))
@@ -147,6 +232,24 @@ for mode in (E.MODE_STATIC, E.MODE_BUCKET):
     got = np.asarray(EP.execute(g, inst.qry, mode=mode, n_buckets=8,
                                 n_workers=4, use_shard_map=True).total)
     assert np.array_equal(got, want), (mode, got, want)
+# ETR hop: the rank-summary exchange lowers under shard_map too
+etr = make_workload(g, templates=("Q8",), n_per_template=1, seed=33)[0]
+want = np.asarray(E.execute(g, etr.qry, mode=E.MODE_STATIC,
+                            sliced=False).total)
+got = np.asarray(EP.execute(g, etr.qry, mode=E.MODE_STATIC, n_workers=4,
+                            use_shard_map=True).total)
+assert np.array_equal(got, want), ("etr", got, want)
+# MIN/MAX: extremum publish combines with pmin/pmax across devices
+b = g.meta["builder"]
+qmm = Q.PathQuery(
+    v_preds=(Q.VertexPredicate(b.v_type_ids["person"]),
+             Q.VertexPredicate(b.v_type_ids["post"])),
+    e_preds=(Q.EdgePredicate(b.e_type_ids["created"], Q.DIR_OUT),),
+    agg_op=Q.AGG_MIN, agg_key=b.key_ids["length"])
+dense = E.execute(g, qmm, sliced=False)
+part = EP.execute(g, qmm, n_workers=4, use_shard_map=True)
+assert np.array_equal(np.asarray(dense.minmax), np.asarray(part.minmax))
+assert np.array_equal(np.asarray(dense.per_vertex), np.asarray(part.per_vertex))
 print("PARTITIONED_SHARD_MAP_OK")
 """
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
@@ -158,7 +261,11 @@ print("PARTITIONED_SHARD_MAP_OK")
 # ------------------------------------------------------------- cost model
 def test_planner_distribution_aware(medium_static_graph):
     """With a partitioning, plans pay a θ_net exchange term scaled by the
-    partitioner's cut; distributed estimates stay finite and ordered."""
+    partitioner's cut; distributed estimates stay finite and ordered; every
+    query class (incl. MIN/MAX and ETR hops) is costed on the distributed
+    path — no dense-only fallback in plan selection."""
+    import dataclasses
+    from repro.core import query as Q
     from repro.core.planner import Planner
     from repro.core.stats import GraphStats
 
@@ -170,9 +277,10 @@ def test_planner_distribution_aware(medium_static_graph):
     single = Planner(g, stats, coeffs=coeffs)
     multi = Planner(g, stats, coeffs=coeffs, partitioning=part)
     assert multi.n_workers == 4 and 0.0 < multi.cut_frac < 1.0
-    # structural exchange volumes in the executor's units (halo ghosts / 2E)
+    # structural exchange volumes in the executor's units: halo ghosts on
+    # plain hops, boundary rank summaries (cut edges, < frontier) on ETR hops
     assert 0 < multi.exchange_volume
-    assert multi.frontier_volume == 2 * g.n_edges
+    assert 0 < multi.etr_exchange_volume < 2 * g.n_edges
     wl = make_workload(g, templates=("Q2", "Q4"), n_per_template=1, seed=3)
     for inst in wl:
         for split in single.enumerate_plans(inst.qry):
@@ -181,6 +289,21 @@ def test_planner_distribution_aware(medium_static_graph):
             assert np.isfinite(e4.t_ms) and e4.t_ms > 0
             # exchange volume recorded on the distributed steps only
             assert all(s.m_net == 0.0 for s in e1.steps)
+            # ETR steps pay the cut-summary volume, never the frontier;
+            # plain hops pay the halo-ghost volume
+            for s in e4.steps:
+                if s.etr:
+                    assert s.m_net == multi.etr_exchange_volume
+                else:
+                    assert s.m_net in (0.0, multi.exchange_volume)
         # the distributed planner still returns a valid best plan
         best = multi.choose(inst.qry)
         assert best.split in single.enumerate_plans(inst.qry)
+    # MIN/MAX gets a distributed plan too: extremum channel rides the
+    # exchange, so its hops cost MORE than the plain-count plan's
+    qry = wl[0].qry
+    qmm = dataclasses.replace(qry, agg_op=Q.AGG_MIN, agg_key=0)
+    est_cnt = multi.estimate(dataclasses.replace(qry, agg_op=Q.AGG_COUNT,
+                                                 agg_key=0), 0)
+    est_mm = multi.estimate(qmm, 0)
+    assert np.isfinite(est_mm.t_ms) and est_mm.t_ms > est_cnt.t_ms

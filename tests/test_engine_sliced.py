@@ -1,7 +1,11 @@
-"""Type-sliced engine (§Perf path) ≡ dense engine ≡ oracle."""
+"""Type-sliced engine (§Perf path) ≡ dense engine ≡ oracle.
+
+Equivalence tests are thin wrappers over the shared four-way differential
+harness in ``conformance.py``."""
 import numpy as np
 import pytest
 
+import conformance as C
 from repro.core import engine as E
 from repro.core import engine_sliced as ES
 from repro.core.ref_engine import RefEngine
@@ -28,11 +32,10 @@ def test_sliced_equals_dense_all_templates(small_static_graph):
             continue
         want = ref.count(inst.qry)
         for split in range(inst.qry.n_vertices):
-            dense = E.count_results(small_static_graph, inst.qry, split=split,
-                                    sliced=False)
-            sliced = E.count_results(small_static_graph, inst.qry, split=split,
-                                     sliced=True)
-            assert dense == sliced == want, (inst.template, split)
+            legs = C.engine_results(small_static_graph, inst.qry,
+                                    E.MODE_STATIC, workers=(), split=split)
+            C.assert_engines_identical(legs, (inst.template, split))
+            assert float(legs["dense"]["total"]) == want, (inst.template, split)
         n += 1
     assert n >= 10
 

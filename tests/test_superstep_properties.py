@@ -1,0 +1,136 @@
+"""Property tests for the superstep interval/bucket state algebra.
+
+The running-intersection cell algebra (``apply_validity`` clamping in
+MODE_INTERVAL) must behave like interval intersection at bucket granularity:
+idempotent, commutative, and — whenever the exact intersection is non-empty —
+equal to clamping by ``iv.intersect`` directly.  (When the exact intersection
+is empty the sequential clamps may legitimately keep a bucket straddling the
+gap: the algebra is bucket-granular by design; see the conformance-harness
+docstring.)  Delivery reductions are checked against plain numpy oracles.
+
+Intervals are drawn INSIDE the bucketed span, mirroring the engine invariant
+that every entity lifespan lies within the graph lifespan the bucket edges
+cover (out-of-span intervals would be clipped into the edge buckets).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core import intervals as iv  # noqa: E402
+from repro.core import query as Q  # noqa: E402
+from repro.core import superstep as SS  # noqa: E402
+
+B = 5
+SPAN = 100
+BEDGES = jnp.asarray(iv.bucket_edges(0, SPAN, B))
+N = 6
+
+ivl = st.tuples(st.integers(0, SPAN - 1), st.integers(1, SPAN)).map(
+    lambda t: (t[0], min(t[0] + t[1], SPAN)))
+ivls = st.lists(ivl, min_size=N, max_size=N).map(
+    lambda xs: jnp.asarray(np.asarray(xs, np.int32)))
+matches = st.lists(st.booleans(), min_size=N, max_size=N).map(
+    lambda xs: jnp.asarray(np.asarray(xs)))
+cells = st.lists(
+    st.lists(st.integers(0, 3), min_size=B * (B + 1), max_size=B * (B + 1)),
+    min_size=N, max_size=N,
+).map(lambda xs: jnp.asarray(
+    np.asarray(xs, np.float32).reshape(N, B, B + 1)))
+
+
+def _apply(state, m, v):
+    with SS.bucket_scope(BEDGES):
+        return np.asarray(SS.apply_validity(state, m, v, SS.MODE_INTERVAL))
+
+
+@settings(max_examples=50, deadline=None)
+@given(cells, matches, ivls)
+def test_clamp_idempotent(state, m, v):
+    once = _apply(state, m, v)
+    assert np.array_equal(_apply(jnp.asarray(once), m, v), once)
+
+
+@settings(max_examples=50, deadline=None)
+@given(cells, matches, ivls, ivls)
+def test_clamp_commutes(state, m, v1, v2):
+    ab = _apply(jnp.asarray(_apply(state, m, v1)), m, v2)
+    ba = _apply(jnp.asarray(_apply(state, m, v2)), m, v1)
+    assert np.array_equal(ab, ba)
+
+
+@settings(max_examples=50, deadline=None)
+@given(cells, matches, ivls, ivls)
+def test_clamp_join_matches_exact_intersection(state, m, v1, v2):
+    """Sequential clamping ≡ clamping by the exact intersection, wherever
+    that intersection is non-empty (the associativity of the join)."""
+    ab = _apply(jnp.asarray(_apply(state, m, v1)), m, v2)
+    inter = iv.intersect(v1, v2)
+    direct = _apply(state, m, inter)
+    nonempty = np.asarray(inter[:, 0] < inter[:, 1])
+    assert np.array_equal(ab[nonempty], direct[nonempty])
+
+
+@settings(max_examples=50, deadline=None)
+@given(cells)
+def test_valid_cell_mask_idempotent(state):
+    once = SS._mask_valid_cells(state)
+    assert np.array_equal(np.asarray(SS._mask_valid_cells(once)),
+                          np.asarray(once))
+
+
+@settings(max_examples=50, deadline=None)
+@given(matches, ivls)
+def test_interval_init_projects_to_bucket_init(m, v):
+    """cells_to_buckets ∘ interval-init ≡ bucket-init: the two temporal modes
+    agree on the per-bucket view of a freshly seeded state."""
+    with SS.bucket_scope(BEDGES):
+        ic = SS.init_state(m, v, SS.MODE_INTERVAL, B)
+        bmask = iv.interval_to_bucket_mask(v, BEDGES)
+        binit = SS.init_state(m, bmask, SS.MODE_BUCKET, B)
+        assert np.array_equal(np.asarray(SS.cells_to_buckets(ic)),
+                              np.asarray(binit))
+
+
+segments = st.integers(2, 6).flatmap(lambda ns: st.tuples(
+    st.just(ns),
+    st.lists(st.integers(0, ns - 1), min_size=1, max_size=24),
+    ))
+
+
+@settings(max_examples=50, deadline=None)
+@given(segments, st.data())
+def test_deliver_extremum_matches_numpy(seg_spec, data):
+    """Per-segment segment_min/segment_max against a numpy loop oracle,
+    including empty segments (→ the aggregation-neutral ±inf)."""
+    nseg, seg_list = seg_spec
+    seg = np.sort(np.asarray(seg_list, np.int32))
+    vals = np.asarray(
+        data.draw(st.lists(st.integers(-50, 50), min_size=len(seg),
+                           max_size=len(seg))), np.float32)
+    for op in (Q.AGG_MIN, Q.AGG_MAX):
+        got = np.asarray(SS.deliver_extremum(
+            jnp.asarray(vals), jnp.asarray(seg), nseg, op))
+        want = np.full(nseg, np.asarray(SS.minmax_neutral(op)), np.float32)
+        for s, v in zip(seg, vals):
+            want[s] = min(want[s], v) if op == Q.AGG_MIN else max(want[s], v)
+        assert np.array_equal(got, want), op
+
+
+@settings(max_examples=50, deadline=None)
+@given(segments, st.data())
+def test_deliver_matches_numpy(seg_spec, data):
+    nseg, seg_list = seg_spec
+    seg = np.sort(np.asarray(seg_list, np.int32))
+    vals = np.asarray(
+        data.draw(st.lists(st.integers(-50, 50), min_size=len(seg),
+                           max_size=len(seg))), np.float32)
+    got = np.asarray(SS.deliver(jnp.asarray(vals), jnp.asarray(seg), nseg))
+    want = np.zeros(nseg, np.float32)
+    np.add.at(want, seg, vals)
+    assert np.array_equal(got, want)
