@@ -17,6 +17,10 @@ if [[ "${1:-}" != "--fast" ]]; then
   CONFORMANCE_SCALE=ci python -m pytest tests/test_conformance.py -x -q
   echo "== smoke: engine vs oracle (all modes/splits) =="
   python scripts/smoke_engine.py
+  echo "== smoke: workload + batched scheduler =="
+  python scripts/smoke_workload.py
+  echo "== serving: LDBC replay through the batch scheduler (artifact: BENCH_serving.json) =="
+  BENCH_ENFORCE=1 python -m benchmarks.serving
 fi
 
 echo "CI GATE PASSED"

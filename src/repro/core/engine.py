@@ -412,6 +412,99 @@ def count_results(graph, qry, **kw) -> float:
     return float(t.sum()) if t.ndim else float(t)
 
 
+def check_batch_shape(queries: Sequence[Q.PathQuery]) -> tuple:
+    """Validate that a batch shares one template shape; returns the key."""
+    assert queries, "empty batch"
+    shape0 = queries[0].shape_key()
+    for q in queries[1:]:
+        if q.shape_key() != shape0:
+            raise ValueError("batched queries must share a template shape")
+    return shape0
+
+
+def batch_executable(
+    graph: TemporalGraph,
+    qry: Q.PathQuery,
+    split: Optional[int] = None,
+    mode: int = MODE_STATIC,
+    n_buckets: int = 16,
+    sliced: Optional[bool] = None,
+):
+    """Compiled batched entry for one query shape (the serving runtime's
+    executable unit).
+
+    Returns ``run(params)`` where ``params`` is the stacked parameter tensor
+    int32[B, n_clauses, 3] of same-shape instances; ``run`` yields an
+    ``ExecOutput`` whose every field carries a leading query axis.  The jitted
+    callable is cached per (graph, shape, plan) and retraces only on a new
+    batch size B — callers that pad B to size buckets (serving/compile.py)
+    re-trace a bounded number of times, then never again.
+    """
+    if split is None:
+        split = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1
+    gdev = _prepare_gdev(graph)
+    bedges = jnp.asarray(
+        iv.bucket_edges(graph.lifespan[0], graph.lifespan[1], n_buckets)
+    )
+    from . import engine_sliced as ES
+
+    use_sliced = ES.sliceable(qry) if sliced is None else sliced
+    if use_sliced and not ES.sliceable(qry):
+        raise ValueError("query not sliceable (wildcard vertex type)")
+    key = ("batch", id(graph), qry.shape_key(), split, mode, n_buckets,
+           bool(use_sliced))
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        if use_sliced:
+            sb = ES.SliceBounds.from_graph(graph)
+
+            def one(gd, params, be):
+                out = ES.execute_plan_sliced(gd, qry, split, mode, n_buckets,
+                                             params, be, sb)
+                return out.total, out.per_vertex, out.minmax
+        else:
+            def one(gd, params, be):
+                out = execute_plan_traced(gd, qry, split, mode, n_buckets,
+                                          params, be)
+                return out.total, out.per_vertex, out.minmax
+
+        fn = jax.jit(jax.vmap(one, in_axes=(None, 0, None)))
+        _JIT_CACHE[key] = fn
+
+    embed = None
+    if use_sliced and qry.agg_op != Q.AGG_NONE:
+        embed = ES.SliceBounds.from_graph(graph).v[qry.v_preds[0].vtype]
+    V = graph.n_vertices
+
+    def run(params) -> ExecOutput:
+        total, per_vertex, minmax = fn(gdev, jnp.asarray(params), bedges)
+        if embed is not None and per_vertex is not None:
+            # sliced aggregates live on the first-vertex type slice; re-embed
+            lo, hi = embed
+            full = jnp.zeros((per_vertex.shape[0], V) + per_vertex.shape[2:],
+                             per_vertex.dtype)
+            per_vertex = full.at[:, lo:hi].set(per_vertex)
+        return ExecOutput(total, per_vertex, minmax, [])
+
+    return run
+
+
+def execute_batch_out(
+    graph: TemporalGraph,
+    queries: Sequence[Q.PathQuery],
+    split: Optional[int] = None,
+    mode: int = MODE_STATIC,
+    n_buckets: int = 16,
+    sliced: Optional[bool] = None,
+) -> ExecOutput:
+    """Batched execution of same-shape instances; full ExecOutput with a
+    leading query axis on every field (aggregates included)."""
+    check_batch_shape(queries)
+    run = batch_executable(graph, queries[0], split, mode, n_buckets, sliced)
+    params = np.stack([Q.query_params(q) for q in queries])
+    return run(params)
+
+
 def execute_batch(
     graph: TemporalGraph,
     queries: Sequence[Q.PathQuery],
@@ -429,37 +522,8 @@ def execute_batch(
     mode of the engine (beyond-paper; see DESIGN.md §2 query-as-data).
 
     Returns totals [n_queries] (static/interval) or [n_queries, B] (bucket).
+    For aggregates / per-vertex outputs use ``execute_batch_out``.
     """
-    assert queries, "empty batch"
-    shape0 = queries[0].shape_key()
-    for q in queries[1:]:
-        if q.shape_key() != shape0:
-            raise ValueError("batched queries must share a template shape")
-    qry = queries[0]
-    if split is None:
-        split = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1
-    gdev = _prepare_gdev(graph)
-    bedges = jnp.asarray(
-        iv.bucket_edges(graph.lifespan[0], graph.lifespan[1], n_buckets)
+    return np.asarray(
+        execute_batch_out(graph, queries, split, mode, n_buckets, sliced).total
     )
-    from . import engine_sliced as ES
-
-    use_sliced = ES.sliceable(qry) if sliced is None else sliced
-    key = ("batch", id(graph), shape0, split, mode, n_buckets, bool(use_sliced))
-    fn = _JIT_CACHE.get(key)
-    if fn is None:
-        if use_sliced:
-            sb = ES.SliceBounds.from_graph(graph)
-
-            def one(gd, params, be):
-                return ES.execute_plan_sliced(
-                    gd, qry, split, mode, n_buckets, params, be, sb).total
-        else:
-            def one(gd, params, be):
-                return execute_plan_traced(
-                    gd, qry, split, mode, n_buckets, params, be).total
-
-        fn = jax.jit(jax.vmap(one, in_axes=(None, 0, None)))
-        _JIT_CACHE[key] = fn
-    params = jnp.stack([jnp.asarray(Q.query_params(q)) for q in queries])
-    return np.asarray(fn(gdev, params, bedges))

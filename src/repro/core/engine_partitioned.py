@@ -478,6 +478,70 @@ def count_results(graph, qry, **kw) -> float:
     return float(t.sum()) if t.ndim else float(t)
 
 
+def batch_executable(
+    graph: TemporalGraph,
+    qry: Q.PathQuery,
+    split: Optional[int] = None,
+    mode: int = MODE_STATIC,
+    n_buckets: int = 16,
+    n_workers: int = 4,
+    parts_per_type: Optional[int] = None,
+):
+    """Compiled batched entry on the DISTRIBUTED path: the whole superstep
+    pipeline (halo gather → local delivery → boundary exchange) runs with a
+    query-batch leading axis, vmapped over the packed parameter tensor — one
+    partitioned traversal sweep serves the entire same-shape batch.
+
+    Returns ``run(params[B, n_clauses, 3]) -> ExecOutput`` with a leading
+    query axis on every field.  The worker axis always runs in the vmap
+    simulation here (a query-batch vmap around shard_map is not supported);
+    sharded multi-device serving is a ROADMAP follow-on.
+    """
+    if split is None:
+        split = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1
+    gdev = _prepare_gdev(graph)
+    _, arrays, pdev = partition_for(graph, n_workers, parts_per_type)
+    bedges = jnp.asarray(
+        iv.bucket_edges(graph.lifespan[0], graph.lifespan[1], n_buckets)
+    )
+    key = ("batch", id(graph), qry.shape_key(), split, mode, n_buckets,
+           n_workers, arrays.v_max)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        def one(gd, pd, params, be):
+            runner = partial(run_segment_partitioned, gd, pd, 1)
+            out = execute_plan_traced(gd, qry, split, mode, n_buckets, params,
+                                      be, segment_runner=runner)
+            return out.total, out.per_vertex, out.minmax
+
+        fn = jax.jit(jax.vmap(one, in_axes=(None, None, 0, None)))
+        _JIT_CACHE[key] = fn
+
+    def run(params) -> ExecOutput:
+        total, per_vertex, minmax = fn(gdev, pdev, jnp.asarray(params), bedges)
+        return ExecOutput(total, per_vertex, minmax, [])
+
+    return run
+
+
+def execute_batch_out(
+    graph: TemporalGraph,
+    queries: Sequence[Q.PathQuery],
+    split: Optional[int] = None,
+    mode: int = MODE_STATIC,
+    n_buckets: int = 16,
+    n_workers: int = 4,
+    parts_per_type: Optional[int] = None,
+) -> ExecOutput:
+    """Batched partitioned execution of same-shape instances."""
+    from .engine import check_batch_shape
+    check_batch_shape(queries)
+    run = batch_executable(graph, queries[0], split, mode, n_buckets,
+                           n_workers, parts_per_type)
+    params = np.stack([Q.query_params(q) for q in queries])
+    return run(params)
+
+
 # =========================================================================
 # instrumented per-worker superstep timing (weak-scaling benchmark)
 # =========================================================================

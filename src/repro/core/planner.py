@@ -283,6 +283,40 @@ class Planner:
                 best = est
         return best
 
+    # ------------------------------------------------------- batched serving
+    def estimate_batch(self, queries: Sequence[Q.PathQuery],
+                       split: int) -> PlanEstimate:
+        """Cost a whole same-shape batch at one split point.
+
+        Instances share the traced structure but not their parameter values,
+        so predicate selectivities (clause-frequency lookups) differ per
+        instance — the batch cost is the SUM of per-instance estimates, not
+        the first instance's cost scaled.  The returned steps are the first
+        instance's (for introspection); ``t_ms`` covers the batch.
+        """
+        assert queries, "empty batch"
+        ests = [self.estimate(q, split) for q in queries]
+        return PlanEstimate(split, sum(e.t_ms for e in ests), ests[0].steps)
+
+    def choose_batch(self, queries: Sequence[Q.PathQuery]) -> PlanEstimate:
+        """One split for a same-shape batch, minimising whole-batch cost.
+
+        This is the planner the batch scheduler uses: a vmapped group runs
+        every instance at ONE split, so the right objective is the batch sum
+        — picking the first instance's best split can lose when selectivities
+        differ across instances (the old run_workload_batched bug)."""
+        assert queries, "empty batch"
+        shape0 = queries[0].shape_key()
+        for q in queries[1:]:
+            if q.shape_key() != shape0:
+                raise ValueError("batch planning needs same-shape queries")
+        best = None
+        for split in self.enumerate_plans(queries[0]):
+            est = self.estimate_batch(queries, split)
+            if best is None or est.t_ms < best.t_ms:
+                best = est
+        return best
+
 
 # -------------------------------------------------------------- fitting util
 def fit_linear(features: np.ndarray, times_ms: np.ndarray) -> np.ndarray:

@@ -269,10 +269,17 @@ def make_workload(
     n_per_template: int = 100,
     seed: int = 0,
     aggregate: bool = False,
+    rng: Optional[np.random.Generator] = None,
 ) -> List[QueryInstance]:
-    """Generate the benchmark workload for a graph."""
+    """Generate the benchmark workload for a graph.
+
+    Instance parameters are drawn from ``rng`` when given, else from a fresh
+    ``default_rng(seed)`` — the same (graph, templates, n_per_template, seed)
+    always yields the identical workload, which is what makes serving replay
+    runs (benchmarks/serving.py → BENCH_serving.json) reproducible."""
     s = _Schema(graph)
-    rng = np.random.default_rng(seed)
+    if rng is None:
+        rng = np.random.default_rng(seed)
     dynamic = bool(graph.meta.get("params", {}).get("dynamic", False))
     pools = {
         "tag": _freq_values(graph, "tag") or [0],

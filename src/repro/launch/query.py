@@ -95,9 +95,15 @@ class GraniteServer:
 
     def run_workload_batched(self, workload: List[QueryInstance]
                              ) -> List[QueryResultRecord]:
-        """Throughput mode: group same-template instances and execute each
-        group as ONE vmapped call (engine.execute_batch) — amortises the
-        traversal sweep over the whole template batch."""
+        """LEGACY throughput mode, superseded by the serving runtime
+        (``repro.serving.BatchScheduler`` — use ``run_workload_scheduled``).
+        Kept behind a regression test until removal.  Aggregates and
+        non-sliceable queries still fall back to per-query execution here;
+        the scheduler has no such fallback.
+
+        Group planning uses the batch-aware estimate (``choose_batch``): the
+        old code planned from ``insts[0]`` only and applied that split to the
+        whole group even when instances' predicate selectivities differed."""
         from ..core.engine import execute_batch
         from ..core import engine_sliced as ES
 
@@ -107,16 +113,18 @@ class GraniteServer:
         out: List[Optional[QueryResultRecord]] = [None] * len(workload)
         for key, idxs in groups.items():
             insts = [workload[i] for i in idxs]
-            split = self.plan(insts[0])
+            qs = [x.qry for x in insts]
+            split = (self.planner.choose_batch(qs).split if self.use_planner
+                     else self.plan(insts[0]))
             mode = self._mode_for(insts[0])
             if insts[0].qry.agg_op != -1 or not ES.sliceable(insts[0].qry):
                 for i in idxs:          # fall back to per-query execution
-                    out[i] = self.execute(workload[i])
+                    out[i] = self.execute(workload[i], split=split)
                 continue
-            execute_batch(self.graph, [x.qry for x in insts], split=split,
+            execute_batch(self.graph, qs, split=split,
                           mode=mode, n_buckets=self.n_buckets)   # compile
             t0 = time.perf_counter()
-            totals = execute_batch(self.graph, [x.qry for x in insts],
+            totals = execute_batch(self.graph, qs,
                                    split=split, mode=mode,
                                    n_buckets=self.n_buckets)
             dt = (time.perf_counter() - t0) * 1e3 / len(idxs)
@@ -126,16 +134,40 @@ class GraniteServer:
                                            cnt, dt, dt <= self.budget_s * 1e3)
         return out
 
+    def run_workload_scheduled(self, workload: List[QueryInstance],
+                               engine: str = "auto", warm: bool = True):
+        """Serve the workload through the batch-scheduler runtime (one
+        vmapped call per shape group, no fallbacks).  Returns
+        ``serving.ServedResult`` records in submission order."""
+        from ..serving import BatchScheduler
+        sched = BatchScheduler(self.graph, engine=engine, mode=self.mode,
+                               n_buckets=self.n_buckets,
+                               use_planner=self.use_planner,
+                               budget_s=self.budget_s)
+        return sched.run(workload, warm=warm)
+
 
 def main():
+    """Thin CLI over the serving runtime: sequential loop (default), batched
+    scheduler drain (--serve), or open-loop Poisson replay (--replay)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--persons", type=int, default=1000)
     ap.add_argument("--dist", default="facebook",
                     choices=["altmann", "weibull", "facebook", "zipf"])
     ap.add_argument("--dynamic", action="store_true")
     ap.add_argument("--queries", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload + arrival-process seed (reproducible runs)")
     ap.add_argument("--no-planner", action="store_true")
     ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--serve", action="store_true",
+                    help="drain the workload through the batch scheduler")
+    ap.add_argument("--replay", action="store_true",
+                    help="open-loop Poisson replay through the scheduler")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="--replay arrival rate (queries/s)")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "dense", "sliced", "partitioned"])
     args = ap.parse_args()
 
     params = LdbcParams(n_persons=args.persons, degree_dist=args.dist,
@@ -143,8 +175,22 @@ def main():
     g = generate_ldbc(params)
     print(f"graph {graph_name(params)}: {g.subgraph_stats()}")
     server = GraniteServer(g, use_planner=not args.no_planner)
-    wl = make_workload(g, n_per_template=args.queries)
-    recs = server.run_workload(wl, verbose=True)
+    wl = make_workload(g, n_per_template=args.queries, seed=args.seed)
+
+    if args.replay:
+        from ..serving import BatchScheduler, replay_workload
+        sched = BatchScheduler(g, engine=args.engine,
+                               use_planner=not args.no_planner)
+        rep = replay_workload(sched, wl, rate_qps=args.rate, seed=args.seed,
+                              warm=True)
+        for k, v in rep.as_dict().items():
+            print(f"  {k}: {v}")
+        return
+
+    if args.serve:
+        recs = server.run_workload_scheduled(wl, engine=args.engine)
+    else:
+        recs = server.run_workload(wl, verbose=True)
     by_t = {}
     for r in recs:
         by_t.setdefault(r.template, []).append(r.latency_ms)

@@ -1,0 +1,30 @@
+"""Workload-serving runtime — the subsystem that turns the engine stack into
+a query *service* (ROADMAP north-star: heavy traffic, amortised traversals).
+
+Layout:
+
+  compile.py    plan-tensor compiler: same-shape instances → one padded
+                parameter tensor per shape bucket (pow-2 size buckets bound
+                retracing)
+  cache.py      plan cache (shape bucket × graph fingerprint → split) and
+                compiled-executable cache — steady-state serving neither
+                re-plans nor re-traces
+  scheduler.py  admission queue + batch scheduler: groups by (shape bucket,
+                mode, engine), plans each group with the batch-aware cost
+                model, dispatches ONE vmapped engine call per group
+                (aggregates and the partitioned engine included — no
+                per-query fallback)
+  replay.py     open-loop Poisson replay of the LDBC workload through the
+                scheduler; p50/p95/p99 latency, throughput, completion-rate
+                (the paper's Table 5 serving metrics)
+"""
+from .cache import ExecutableCache, PlanCache, graph_fingerprint
+from .compile import PlanTensor, bucket_key, compile_plan_tensor
+from .replay import ReplayReport, replay_workload
+from .scheduler import BatchScheduler, ServedResult
+
+__all__ = [
+    "BatchScheduler", "ServedResult", "PlanCache", "ExecutableCache",
+    "graph_fingerprint", "PlanTensor", "bucket_key", "compile_plan_tensor",
+    "ReplayReport", "replay_workload",
+]

@@ -1,0 +1,113 @@
+"""Serving caches: plans and compiled executables.
+
+Steady-state serving must not re-plan or re-trace.  Two caches make that an
+invariant the scheduler can assert on, with hit/miss counters the replay
+harness reports:
+
+  PlanCache        (shape bucket, graph fingerprint, mode, engine[, workers])
+                   → chosen split.  The first batch of a bucket pays one
+                   batch-aware planner pass; every later batch reuses it.
+  ExecutableCache  full dispatch key (plan key + padded batch size) → the
+                   bound batched executable from the engines.  Together with
+                   pow-2 size buckets (compile.py) this caps compilations per
+                   shape bucket at log2(max batch size).
+
+The graph fingerprint keys cache entries to graph *content* rather than
+object identity, so a regenerated-but-identical graph still hits while a
+different graph cannot alias (the engines' own jit caches key on ``id()``,
+which is only safe within one graph object's lifetime).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Dict, Optional
+
+
+def graph_fingerprint(graph) -> str:
+    """Content fingerprint of a graph, cached on the graph object.
+
+    Covers everything query results depend on: topology, types, vertex/edge
+    lifespans, and the property columns (K_PROP clauses and MIN/MAX
+    aggregation read them) — two graphs may only share a fingerprint if every
+    engine answer over them is identical."""
+    fp = getattr(graph, "_serving_fingerprint", None)
+    if fp is None:
+        h = hashlib.sha1()
+        h.update(repr((graph.n_vertices, graph.n_edges, graph.lifespan,
+                       graph.n_vertex_types, graph.n_edge_types)).encode())
+        for arr in (graph.v_type, graph.v_life, graph.e_src, graph.e_dst,
+                    graph.e_type, graph.e_life):
+            h.update(arr.tobytes())
+        for name, props in (("v", graph.vprops), ("e", graph.eprops)):
+            for key in sorted(props):
+                col = props[key]
+                h.update(f"{name}{key}".encode())
+                h.update(col.vals.tobytes())
+                h.update(col.life.tobytes())
+        fp = h.hexdigest()[:16]
+        graph._serving_fingerprint = fp
+    return fp
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    def as_dict(self) -> dict:
+        return dict(hits=self.hits, misses=self.misses)
+
+
+class PlanCache:
+    """(shape bucket, graph fingerprint, ...) → split point."""
+
+    def __init__(self):
+        self._plans: Dict[tuple, int] = {}
+        self.stats = CacheStats()
+
+    def get(self, key: tuple) -> Optional[int]:
+        split = self._plans.get(key)
+        if split is None:
+            self.stats.misses += 1
+        else:
+            self.stats.hits += 1
+        return split
+
+    def put(self, key: tuple, split: int) -> None:
+        self._plans[key] = split
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+
+class ExecutableCache:
+    """Dispatch key → bound batched executable (``fn(params) -> ExecOutput``).
+
+    ``get_or_build`` runs ``builder`` exactly once per key; the builder
+    returns the engine's batched callable already bound to graph/plan/mode.
+    """
+
+    def __init__(self):
+        self._fns: Dict[tuple, Callable] = {}
+        self.stats = CacheStats()
+
+    def get_or_build(self, key: tuple, builder: Callable[[], Callable]):
+        fn = self._fns.get(key)
+        if fn is None:
+            self.stats.misses += 1
+            fn = builder()
+            self._fns[key] = fn
+        else:
+            self.stats.hits += 1
+        return fn
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._fns
+
+    def __len__(self) -> int:
+        return len(self._fns)

@@ -261,3 +261,86 @@ def check_case(graph, oracle: Optional[RefEngine], case: Case, mode: int,
             assert_oracle_aggregate(oracle, graph, case.qry, mode, legs,
                                     n_buckets, ctx)
     return legs
+
+
+# =========================================================================
+# serving leg: batched scheduler vs the sequential per-query loop
+# =========================================================================
+def perturbed_batch(qry: Q.PathQuery, n: int):
+    """Same-shape instance batch: the original query plus n-1 variants with
+    shifted clause parameters (values/intervals are DATA in the traced
+    program; structure — the shape bucket — is untouched).  Shifted values
+    may match nothing, which is exactly the selectivity spread a real
+    template workload shows."""
+    import dataclasses as dc
+
+    def shift_clause(c: Q.Clause, d: int) -> Q.Clause:
+        if c.kind == Q.K_PROP:
+            return dc.replace(c, value=c.value + d)
+        lo, hi = c.interval
+        return dc.replace(c, interval=(max(0, lo - d), hi))
+
+    def shift_query(q: Q.PathQuery, d: int) -> Q.PathQuery:
+        v = tuple(dc.replace(vp, clauses=tuple(shift_clause(c, d)
+                                               for c in vp.clauses))
+                  for vp in q.v_preds)
+        e = tuple(dc.replace(ep, clauses=tuple(shift_clause(c, d)
+                                               for c in ep.clauses))
+                  for ep in q.e_preds)
+        return Q.PathQuery(v, e, q.agg_op, q.agg_key)
+
+    batch = [shift_query(qry, d) for d in range(n)]
+    assert all(q.shape_key() == qry.shape_key() for q in batch)
+    return batch
+
+
+def serving_engines(case: Case):
+    """(engine, n_workers) serving configurations for a case: dense, sliced
+    when the query qualifies, and the partitioned engine (full worker sweep
+    at ci scale, first worker count at smoke scale)."""
+    out = [("dense", 0)]
+    if ES.sliceable(case.qry):
+        out.append(("sliced", 0))
+    workers = case.workers if scale() == "ci" else case.workers[:1]
+    out += [("partitioned", w) for w in workers]
+    return out
+
+
+def _sequential_leg(graph, qry, split, mode, n_buckets, engine, n_workers):
+    if engine == "partitioned":
+        return EP.execute(graph, qry, split=split, mode=mode,
+                          n_buckets=n_buckets, n_workers=n_workers)
+    return E.execute(graph, qry, split=split, mode=mode, n_buckets=n_buckets,
+                     sliced=(engine == "sliced"))
+
+
+def check_serving_case(graph, case: Case, mode: int,
+                       n_buckets: int = N_BUCKETS, batch: int = 3):
+    """The serving leg of the matrix: a same-shape batch of ``case``'s query
+    through the batch scheduler must be bit-identical to the sequential
+    per-query loop, on every engine, dispatched as ONE vmapped group (no
+    per-query fallback — aggregates and the partitioned engine included)."""
+    from repro.serving import BatchScheduler
+
+    queries = perturbed_batch(case.qry, batch)
+    for engine, n_workers in serving_engines(case):
+        ctx = (case.name, mode, engine, n_workers)
+        sched = BatchScheduler(graph, engine=engine, mode=mode,
+                               n_buckets=n_buckets, n_workers=max(n_workers, 1),
+                               keep_outputs=True)
+        results = sched.run(queries)
+        # one group, batched end to end: the zero-fallback invariant
+        assert len(sched.last_dispatches) == 1, ctx
+        disp = sched.last_dispatches[0]
+        assert disp.engine == engine and disp.n_real == len(queries), ctx
+        eff_mode = sched._mode_for(case.qry)
+        for q, r in zip(queries, results):
+            out = _sequential_leg(graph, q, r.split, eff_mode, n_buckets,
+                                  engine, n_workers)
+            for field, got in (("total", r.total), ("per_vertex", r.per_vertex),
+                               ("minmax", r.minmax)):
+                want = _np(getattr(out, field))
+                if want is None and got is None:
+                    continue
+                assert want is not None and got is not None, (ctx, field)
+                assert np.array_equal(want, got), (ctx, field, want, got)

@@ -64,6 +64,41 @@ def test_matrix_exercises_matches(small_dynamic_graph, matrix):
     assert nonzero >= 6, "conformance matrix queries mostly match nothing"
 
 
+@pytest.mark.parametrize("mode", C.ALL_MODES)
+@pytest.mark.parametrize("name", CASE_NAMES)
+def test_serving_conformance_matrix(small_dynamic_graph, matrix, name, mode):
+    """Serving leg: a batched scheduler dispatch of each matrix cell must be
+    bit-identical to the sequential per-query loop on every engine, with the
+    whole batch served by ONE vmapped call (zero per-query fallbacks — the
+    aggregate and partitioned cells are exactly the ones the legacy batched
+    mode fell back on)."""
+    C.check_serving_case(small_dynamic_graph, matrix[name], mode)
+
+
+def test_serving_empty_batch(small_dynamic_graph):
+    from repro.serving import BatchScheduler
+    sched = BatchScheduler(small_dynamic_graph)
+    assert sched.flush() == []
+    assert sched.run([]) == []
+    assert sched.last_dispatches == []
+
+
+def test_serving_single_query_batch(small_dynamic_graph, matrix):
+    """A batch of one is a degenerate-but-legal group: same result as the
+    sequential call, dispatched batched (B padded to 1, no fallback)."""
+    from repro.serving import BatchScheduler
+    case = matrix["agg-min"]
+    sched = BatchScheduler(small_dynamic_graph, mode=E.MODE_STATIC,
+                           n_buckets=C.N_BUCKETS, keep_outputs=True)
+    (r,) = sched.run([case.qry])
+    assert len(sched.last_dispatches) == 1
+    assert sched.last_dispatches[0].n_real == 1
+    out = E.execute(small_dynamic_graph, case.qry, split=r.split,
+                    mode=E.MODE_STATIC, n_buckets=C.N_BUCKETS, sliced=False)
+    assert np.array_equal(np.asarray(out.total), r.total)
+    assert np.array_equal(np.asarray(out.minmax), r.minmax)
+
+
 def test_minmax_across_etr_rejected_everywhere(small_dynamic_graph):
     """The one intentionally unsupported combination fails loudly (and
     identically) on the dense AND partitioned paths."""
