@@ -2,14 +2,16 @@
 (paper Table 3 analogue) — writes src/repro/configs/cost_coeffs.json.
 
 Features per measured superstep batch:
-  [1, V_slice, E_slice, etr·E_slice, m̄, m_net]
-where the first five come from dense single-stream runs (m_net = 0) and the
-exchange column m_net comes from MEASURED partitioned supersteps
-(engine_partitioned.measure_supersteps): per-worker compute extents divide by
-the worker count, the boundary-message volume is the partitioner's halo
-ghost count on plain hops and its boundary rank-summary count (cut edges)
-on ETR hops — the volumes the partitioned executor actually exchanges.  The
-fitted θ_net makes plan selection distribution-aware.
+  [1, V_slice, E_slice, etr·E_slice, m̄, m_net_state, m_net_etr]
+where the first five come from dense single-stream runs (exchange columns 0)
+and the two PER-CHANNEL exchange columns come from MEASURED partitioned
+supersteps (engine_partitioned.measure_supersteps): per-worker compute
+extents divide by the worker count, and the boundary volumes are the ragged
+point-to-point lane contents the executor actually moves — halo ghost
+entries for the vertex-state channel (the MIN/MAX extremum channel rides
+the same lanes, so its rows double the state column), boundary rank
+summaries (cut edges) for the ETR channel.  The fitted θ_net / θ_net_etr
+pair makes plan selection distribution-aware per channel.
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ import numpy as np
 
 from repro.core import engine as E
 from repro.core import engine_partitioned as EP
+from repro.core import query as Q
 from repro.core.planner import fit_linear, load_coeffs, save_coeffs
 from repro.core.stats import GraphStats
 from repro.graphdata.ldbc import LdbcParams, generate_ldbc
@@ -75,21 +78,32 @@ def run(write: bool = True):
                     float(np.sum(etrs[:-1] * e_s[:-1])),
                     float(np.sum(e_s[:-1])) * 0.05,  # message proxy
                     0.0,                             # no exchange single-stream
+                    0.0,
                 ])
                 rows.append(feats)
                 times.append(t)
 
-    # ---- partitioned supersteps: measured per-worker makespans + exchange
+    # ---- partitioned supersteps: measured per-worker makespans + the
+    # per-channel ragged exchange volumes (state incl. extremum, ETR)
     g = graphs[0]
     V, E2 = g.n_vertices, 2 * g.n_edges
     trav_by_type = _trav_by_type(g)
     wl = make_workload(g, templates=("Q1", "Q2", "Q4"), n_per_template=2, seed=62)
+    # a MIN/MAX instance so the extremum channel (state lanes ×2) is in the
+    # fitted population, not just modelled — same construction the serving
+    # bench and the multidevice tests use (queries.to_minmax)
+    from repro.graphdata.queries import to_minmax
+    qmm = to_minmax(
+        make_workload(g, templates=("Q2",), n_per_template=1, seed=63)[0],
+        g).qry
+    queries = [inst.qry for inst in wl] + [qmm]
     for w in part_workers:
-        for inst in wl:
-            qry = inst.qry
+        for qry in queries:
             prof = EP.measure_supersteps(g, qry, n_workers=w, repeats=2)
             t = float(prof.makespan_s.sum()) * 1e3  # ms, straggler per hop
-            v_s, e_s, etrs = _step_features(g, qry, trav_by_type, V, E2)
+            fq = qry.reversed() if qry.agg_op != Q.AGG_NONE else qry
+            v_s, e_s, etrs = _step_features(g, fq, trav_by_type, V, E2)
+            ch = prof.channel_totals()
             # features must describe what measure_supersteps TIMES: one
             # dispatch per hop of local compute (edge apply + delivery +
             # halo gather; on ETR hops also the per-worker rank-summary
@@ -101,7 +115,8 @@ def run(write: bool = True):
                 float(np.sum(e_s[:-1])) / w,
                 float(np.sum(etrs[:-1] * e_s[:-1])) / w,
                 float(np.sum(e_s[:-1])) * 0.05 / w,
-                float(prof.exchange_msgs.sum()),
+                float(ch["state"] + ch["extremum"]),
+                float(ch["etr"]),
             ])
             rows.append(feats)
             times.append(t)
@@ -109,21 +124,22 @@ def run(write: bool = True):
     X = np.asarray(rows)
     y = np.asarray(times)
     # Two-stage fit: the compute coefficients come from the dense rows alone
-    # (same conditioning as the seed fit); θ_net then explains the residual
-    # of the partitioned rows over their compute share — this keeps the two
-    # row populations from fighting over the collinear compute columns.
-    dense_sel = X[:, 5] == 0.0
+    # (same conditioning as the seed fit); the two per-channel θ_net's then
+    # explain the residual of the partitioned rows over their compute share —
+    # this keeps the two row populations from fighting over the collinear
+    # compute columns.
+    dense_sel = (X[:, 5] == 0.0) & (X[:, 6] == 0.0)
     theta_c = np.maximum(fit_linear(X[dense_sel, :5], y[dense_sel]), 0.0)
     resid = y[~dense_sel] - X[~dense_sel, :5] @ theta_c
-    m_net = X[~dense_sel, 5]
-    theta_net = float(np.maximum(
-        np.dot(m_net, resid) / max(np.dot(m_net, m_net), 1e-9), 0.0))
-    theta = np.concatenate([theta_c, [theta_net]])
+    M = X[~dense_sel, 5:7]
+    theta_net_pair = np.maximum(fit_linear(M, resid), 0.0)
+    theta = np.concatenate([theta_c, theta_net_pair])
     coeffs = dict(
         theta0=float(theta[0]), theta_init=float(theta[1]),
         theta_v=float(theta[1]), theta_e=float(theta[2]),
         theta_etr=float(theta[3]), theta_m=float(theta[4]),
-        theta_net=theta_net,
+        theta_net=float(theta_net_pair[0]),
+        theta_net_etr=float(theta_net_pair[1]),
     )
     pred = X @ theta
     r2 = 1 - np.sum((y - pred) ** 2) / max(np.sum((y - y.mean()) ** 2), 1e-9)

@@ -7,15 +7,34 @@ traversal edges *arriving* at its vertices, a superstep is
   local compute   per worker: gather boundary state for its halo sources,
                   apply the edge predicate, and DELIVER locally via a
                   per-worker sorted segment-sum (no cross-worker writes);
-  exchange        between supersteps: workers publish the state of their
-                  owned vertices; every worker receives the slice its halo
-                  table names (ghost entries = cross-partition messages).
+  exchange        between supersteps: a point-to-point ragged all-to-all
+                  (``superstep.p2p_exchange`` over the partitioner's lane
+                  tables) delivers each worker exactly the ghost entries its
+                  halo names — only boundary state moves, there is no global
+                  [V]-sized buffer and no psum reduction per hop.
 
-Single-device simulation runs the worker axis with ``jax.vmap``; with more
-than one JAX device the same local-hop function runs under ``shard_map`` over
-a ``workers`` mesh axis, with the exchange realised as an ``lax.psum`` of the
-per-device partial scatters (a BSP all-to-all-ish broadcast — the multi-host
-point-to-point exchange is a ROADMAP follow-on).
+State lives OWNER-LOCAL throughout a segment: per-worker [W, Vmax, *TS]
+vertex state and [W, Emax, *TS] edge counts.  Global views are materialised
+once per segment (the plan skeleton joins in global space), not per hop.
+
+Single-device simulation runs the worker axis with ``jax.vmap`` and the
+exchange as an axis transpose; with more than one JAX device the WHOLE plan
+runs under ``shard_map`` over a ``workers`` mesh axis (one dispatch per
+query/batch) and the same exchange moves with one ``lax.all_to_all`` — both
+paths are pure data movement over identical tables, hence bit-identical.
+
+Three exchange channels ride the same mechanism:
+
+  plain-hop state    each hop ships the ghost vertices' count state
+                     (``PartitionArrays.exchange_volume()`` entries);
+  extremum           MIN/MAX aggregates ship the per-vertex extremum channel
+                     alongside (same lanes, ±inf fill — ownership is
+                     exclusive, so the exchange is a copy, no pmin/pmax);
+  ETR rank summaries ETR hops ship only the boundary rank summaries of cut
+                     segments (``etr_exchange_volume()`` entries, O(cut
+                     edges)): segment owners produce per-edge summaries from
+                     SEGMENT-LOCAL prefix tables (``etr_local_summaries``)
+                     and route them to the edges' owners.
 
 Semantics: bit-identical to ``engine.execute`` for all three temporal modes
 and the FULL query surface — plain counts, COUNT aggregates, MIN/MAX
@@ -25,21 +44,9 @@ unchanged, and (b) each vertex's arrival edges live on ONE worker in
 canonical order, so per-worker segment reductions reproduce the dense
 delivery exactly.
 
-ETR hops need, per current edge, prefix sums over the arrival segment of its
-*source* vertex — segments belong whole to the source vertex's owner, so
-each owner computes the per-edge rank summaries from SEGMENT-LOCAL prefix
-tables over its own prev-hop counts (``superstep.etr_local_summaries`` on
-the partitioner's ``etr_*`` tables) and only the summaries whose consumer is
-another worker cross partitions: O(cut edges) boundary traffic instead of
-the full-frontier reassembly the first version shipped (the simulated
-exchange is the same scatter-through-a-global-buffer used for halo state).
-
-MIN/MAX aggregates ride an extremum channel alongside the count state: the
-per-vertex channel is published with the boundary exchange each superstep,
-workers gather the halo slice, form per-edge messages gated by live counts,
-and deliver with a per-worker ``segment_min``/``segment_max``
-(``superstep.deliver_extremum``); under shard_map the publish combines
-partial scatters with ``lax.pmin``/``pmax`` instead of ``psum``.
+Batched serving (``batch_executable``): the query-batch leading axis is
+vmapped INSIDE the shard_map body, so one dispatch runs (batch × workers)
+on the device mesh — the scheduler's unit of work on the distributed path.
 """
 from __future__ import annotations
 
@@ -60,6 +67,10 @@ from .engine import (ExecOutput, SegmentResult, _pbases, _prepare_gdev,
 from .graph import TemporalGraph
 from .superstep import MODE_BUCKET, MODE_INTERVAL, MODE_STATIC
 
+#: boundary-exchange channels, in reporting order (measure_supersteps,
+#: weak_scaling, fit_cost_model all use these indices)
+CHANNELS = ("state", "extremum", "etr")
+
 
 # =========================================================================
 # device tables
@@ -72,11 +83,17 @@ def _prepare_pdev(arrays) -> dict:
         dst_local=jnp.asarray(arrays.dst_local),
         halo_ids=jnp.asarray(arrays.halo_ids),
         src_halo=jnp.asarray(arrays.src_halo),
+        halo_own_slot=jnp.asarray(arrays.halo_own_slot),
+        xchg_send_slot=jnp.asarray(arrays.xchg_send_slot),
+        xchg_recv_slot=jnp.asarray(arrays.xchg_recv_slot),
         etr_perm_local_s=jnp.asarray(arrays.etr_perm_local_s),
         etr_perm_local_e=jnp.asarray(arrays.etr_perm_local_e),
         etr_src_eids=jnp.asarray(arrays.etr_src_eids),
         etr_src_base=jnp.asarray(arrays.etr_src_base),
         etr_src_len=jnp.asarray(arrays.etr_src_len),
+        etr_local_slot=jnp.asarray(arrays.etr_local_slot),
+        etr_send_slot=jnp.asarray(arrays.etr_send_slot),
+        etr_recv_slot=jnp.asarray(arrays.etr_recv_slot),
     )
 
 
@@ -103,148 +120,83 @@ def _halo_gather(sv_halo, src_halo):
 
 
 def _scatter_rows(rows_w, ids, n_global, fill=0.0):
-    """Inverse of _shard_rows: per-worker rows back to global [n_global, ...].
-    Each real entity appears in exactly one worker row; pads land on the
-    dropped sentinel row.  ``fill`` sets the untouched-entry value (0 for
-    count channels, the aggregation-neutral ±inf for extremum channels)."""
+    """Per-worker rows back to global [n_global, ...].  Each real entity
+    appears in exactly one worker row; pads land on the dropped sentinel
+    row.  ``fill`` sets the untouched-entry value (0 for count channels, the
+    aggregation-neutral ±inf for extremum channels).  Used ONCE per segment
+    to publish the final global views — never for the per-hop exchange."""
     flat_ids = ids.reshape(-1)
     flat = rows_w.reshape((-1,) + rows_w.shape[2:])
     out = jnp.full((n_global + 1,) + rows_w.shape[2:], fill, rows_w.dtype)
     return out.at[flat_ids].set(flat, unique_indices=False)[:n_global]
 
 
-# =========================================================================
-# the local hop (per worker): halo gather → edge apply → local delivery
-# =========================================================================
-def _local_hop(sv_global, wmask, evalid, own_ids, edge_ids, dst_local,
-               halo_ids, src_halo, mode: int,
-               mch_global=None, minmax_op: int = Q.AGG_MIN):
-    """One worker-axis superstep of local compute.
+def _gather_vpred_w(vm, vv, own_ids):
+    """Gather a global vertex predicate at owned vertices, flattened over
+    [Wl·Vmax] (pad slots read the synthetic zero row → dead state)."""
+    Wl, Vmax = own_ids.shape
+    vm_w = _shard_rows(vm, own_ids).reshape(Wl * Vmax)
+    vv_w = None
+    if vv is not None:
+        g = _shard_rows(vv, own_ids)
+        vv_w = g.reshape((Wl * Vmax,) + g.shape[2:])
+    return vm_w, vv_w
 
-    sv_global [V, *TS] is the post-exchange source state every worker reads
-    its halo slice from; the remaining args carry a leading worker axis.
-    When ``mch_global`` [V] is given, the extremum channel is exchanged and
-    delivered alongside: same halo gather, per-edge messages gated by the
-    live count, per-worker segment_min/segment_max delivery.
-    Returns (cnt_w [W, Emax, *TS], arrivals_w [W, Vmax, *TS], mch_w or None).
+
+# =========================================================================
+# the local hop (per worker): p2p exchange → halo gather → edge apply →
+# local delivery
+# =========================================================================
+def _exchange_state(state_w, pdev, axis_name, fill=0.0):
+    """The vertex-state boundary exchange: every worker receives its halo
+    slice — self-owned entries by local copy, ghost entries point-to-point."""
+    h_max = pdev["halo_ids"].shape[1]
+    return SS.p2p_exchange(state_w, pdev["halo_own_slot"],
+                           pdev["xchg_send_slot"], pdev["xchg_recv_slot"],
+                           h_max, axis_name, fill=fill)
+
+
+def _local_hop_p2p(state_w, wmask, evalid, pdev, mode: int, axis_name,
+                   mch_w=None, minmax_op: int = Q.AGG_MIN):
+    """One superstep on owner-local state.
+
+    state_w [Wl, Vmax, *TS] is the owned-vertex state; ``wmask``/``evalid``
+    are the (replicated) global edge-predicate results, gathered at owned
+    edges.  When ``mch_w`` [Wl, Vmax] is given, the extremum channel is
+    exchanged and delivered alongside on the same lanes.
+    Returns (cnt_w [Wl, Emax, *TS], arrivals_w [Wl, Vmax, *TS], mch or None).
     """
-    W, Emax = edge_ids.shape
-    v_max = own_ids.shape[1]
-    # exchange receive: halo slice of the published state, then local gather
-    sv_halo = _shard_rows(sv_global, halo_ids)              # [W, Hmax, *TS]
-    src_val = _halo_gather(sv_halo, src_halo)               # [W, Emax, *TS]
+    edge_ids = pdev["edge_ids"]
+    Wl, Emax = edge_ids.shape
+    v_max = pdev["own_ids"].shape[1]
+    halo = _exchange_state(state_w, pdev, axis_name)        # [Wl, Hmax, *TS]
+    src_val = _halo_gather(halo, pdev["src_halo"])          # [Wl, Emax, *TS]
     # local edge predicate application (flatten workers: primitives are
     # elementwise over the leading entity axis)
+    flat = lambda a: a.reshape((Wl * Emax,) + a.shape[2:])
     wmask_w = _shard_rows(wmask, edge_ids)
-    ts = src_val.shape[2:]
-    flat = lambda a: a.reshape((W * Emax,) + a.shape[2:])
     ev_flat = None if evalid is None else flat(_shard_rows(evalid, edge_ids))
     cnt = SS.apply_edge(flat(src_val), flat(wmask_w), ev_flat, mode)
-    cnt_w = cnt.reshape((W, Emax) + ts)
+    cnt_w = cnt.reshape((Wl, Emax) + cnt.shape[1:])
     # local delivery: per-worker sorted segment-sum (pad edges hit the trash
     # segment v_max, sliced off)
     arrivals_w = jax.vmap(
         lambda c, d: SS.deliver(c, d, v_max + 1)
-    )(cnt_w, dst_local)[:, :v_max]
-    mch_w = None
-    if mch_global is not None:
-        m_src = _halo_gather(_shard_rows(mch_global, halo_ids), src_halo)
-        m_e = SS.minmax_edge(flat(m_src), cnt, minmax_op, mode)
-        mch_w = jax.vmap(
-            lambda m, d: SS.deliver_extremum(m, d, v_max + 1, minmax_op)
-        )(m_e.reshape((W, Emax)), dst_local)[:, :v_max]
-    return cnt_w, arrivals_w, mch_w
-
-
-def _publish(cnt_w, arrivals_w, pdev, n2e, V, psum_axis=None,
-             mch_w=None, minmax_op: int = Q.AGG_MIN):
-    """Exchange send: scatter per-worker results to global views.  Under
-    shard_map each device holds a partial scatter; psum (pmin/pmax for the
-    extremum channel) completes it."""
-    cnt_g = _scatter_rows(cnt_w, pdev["edge_ids"], n2e)
-    arr_g = _scatter_rows(arrivals_w, pdev["own_ids"], V)
-    mch_g = None
+    )(cnt_w, pdev["dst_local"])[:, :v_max]
+    mch_out = None
     if mch_w is not None:
-        mch_g = _scatter_rows(mch_w, pdev["own_ids"], V,
-                              fill=SS.minmax_neutral(minmax_op))
-    if psum_axis is not None:
-        cnt_g = jax.lax.psum(cnt_g, psum_axis)
-        arr_g = jax.lax.psum(arr_g, psum_axis)
-        if mch_g is not None:
-            combine = (jax.lax.pmin if minmax_op == Q.AGG_MIN
-                       else jax.lax.pmax)
-            mch_g = combine(mch_g, psum_axis)
-    return cnt_g, arr_g, mch_g
-
-
-def _shard_map_call(n_devices: int, shard_fn, wargs, rargs):
-    """Run ``shard_fn(*wargs, *rargs)`` under shard_map over a ``workers``
-    mesh axis: worker-axis args sharded, the rest replicated."""
-    from jax.sharding import Mesh, PartitionSpec as P
-    try:  # moved out of experimental in newer jax
-        from jax import shard_map
-    except ImportError:
-        from jax.experimental.shard_map import shard_map
-    import inspect
-    # the replication-check kwarg was renamed check_rep → check_vma; detect
-    # from the signature, not from where the import succeeded
-    rep_kw = ("check_vma" if "check_vma" in
-              inspect.signature(shard_map).parameters else "check_rep")
-    mesh = Mesh(np.asarray(jax.devices()[:n_devices]), ("workers",))
-    wspec, rspec = P("workers"), P()
-    out = shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=tuple([wspec] * len(wargs) + [rspec] * len(rargs)),
-        out_specs=rspec,
-        **{rep_kw: False},
-    )(*wargs, *rargs)
-    return out
-
-
-def _run_hop(gdev, pdev, sv_global, wmask, evalid, mode, n_devices: int,
-             mch_global=None, minmax_op: int = Q.AGG_MIN):
-    """Dispatch one hop's local compute over the worker axis: plain vmap on a
-    single device, shard_map over a ``workers`` mesh axis otherwise."""
-    V = gdev["v_life"].shape[0]
-    n2e = gdev["t_dst"].shape[0]
-    if n_devices <= 1:
-        cnt_w, arrivals_w, mch_w = _local_hop(
-            sv_global, wmask, evalid, pdev["own_ids"], pdev["edge_ids"],
-            pdev["dst_local"], pdev["halo_ids"], pdev["src_halo"], mode,
-            mch_global, minmax_op)
-        return _publish(cnt_w, arrivals_w, pdev, n2e, V,
-                        mch_w=mch_w, minmax_op=minmax_op)
-
-    bedges = SS.current_bedges()
-    with_mch = mch_global is not None
-
-    def shard_fn(own_ids, edge_ids, dst_local, halo_ids, src_halo,
-                 sv_g, wm, ev, mch_g, be):
-        with SS.bucket_scope(be):
-            cnt_w, arr_w, mch_w = _local_hop(
-                sv_g, wm, ev, own_ids, edge_ids, dst_local, halo_ids,
-                src_halo, mode, mch_g if with_mch else None, minmax_op)
-            sub = dict(own_ids=own_ids, edge_ids=edge_ids)
-            cnt_g, arr_g, mch_out = _publish(
-                cnt_w, arr_w, sub, n2e, V, psum_axis="workers",
-                mch_w=mch_w, minmax_op=minmax_op)
-            if mch_out is None:
-                mch_out = jnp.zeros((), jnp.float32)
-            return cnt_g, arr_g, mch_out
-
-    be = bedges if bedges is not None else jnp.zeros((1,), jnp.int32)
-    cnt_g, arr_g, mch_out = _shard_map_call(
-        n_devices, shard_fn,
-        (pdev["own_ids"], pdev["edge_ids"], pdev["dst_local"],
-         pdev["halo_ids"], pdev["src_halo"]),
-        (sv_global, wmask,
-         evalid if evalid is not None else jnp.zeros((n2e,), jnp.float32),
-         mch_global if with_mch else jnp.zeros((), jnp.float32), be))
-    return cnt_g, arr_g, (mch_out if with_mch else None)
+        neutral = SS.minmax_neutral(minmax_op)
+        m_halo = _exchange_state(mch_w, pdev, axis_name, fill=neutral)
+        m_src = _halo_gather(m_halo, pdev["src_halo"])
+        m_e = SS.minmax_edge(flat(m_src), cnt, minmax_op, mode)
+        mch_out = jax.vmap(
+            lambda m, d: SS.deliver_extremum(m, d, v_max + 1, minmax_op)
+        )(m_e.reshape((Wl, Emax)), pdev["dst_local"])[:, :v_max]
+    return cnt_w, arrivals_w, mch_out
 
 
 # =========================================================================
-# ETR hop: per-worker rank-summary production + exchange
+# ETR hop: per-worker rank-summary production + p2p summary exchange
 # =========================================================================
 def _ranks_for_produced(gdev, pdev):
     """Gather the global rank tables at each worker's produced edges:
@@ -265,39 +217,57 @@ def _worker_etr_summaries(cnt_w, perm_ls, perm_le, base, seg_len, ranks,
     return SS.etr_local_summaries(cps, cpe, base, seg_len, ranks, op, backward)
 
 
-def _etr_summaries(gdev, pdev, arrivals_e, op: int, backward: bool,
-                   n_devices: int):
-    """The ETR boundary exchange: owners produce per-edge rank summaries from
-    local prefix tables; the scatter to the global [2E, *TS] view simulates
-    the sends.  Only summaries whose consumer is another worker are real
-    cross-partition traffic (PartitionArrays.etr_exchange_volume)."""
-    n2e = gdev["t_dst"].shape[0]
+def _etr_produce_w(cnt_prev_w, gdev, pdev, op: int, backward: bool):
+    """All workers' rank summaries from their owned prev-hop counts:
+    [Wl, Smax, *TS]."""
     ranks_w = _ranks_for_produced(gdev, pdev)
-    if n_devices <= 1:
-        cnt_w = _shard_rows(arrivals_e, pdev["edge_ids"])   # owner-local view
-        out_w = jax.vmap(
-            lambda c, pls, ple, b, sl, r: _worker_etr_summaries(
-                c, pls, ple, b, sl, r, op, backward)
-        )(cnt_w, pdev["etr_perm_local_s"], pdev["etr_perm_local_e"],
-          pdev["etr_src_base"], pdev["etr_src_len"], ranks_w)
-        return _scatter_rows(out_w, pdev["etr_src_eids"], n2e)
+    return jax.vmap(
+        lambda c, pls, ple, b, sl, r: _worker_etr_summaries(
+            c, pls, ple, b, sl, r, op, backward)
+    )(cnt_prev_w, pdev["etr_perm_local_s"], pdev["etr_perm_local_e"],
+      pdev["etr_src_base"], pdev["etr_src_len"], ranks_w)
 
-    def shard_fn(edge_ids, perm_ls, perm_le, base, seg_len, ranks, src_eids,
-                 arr_e):
-        cnt_w = _shard_rows(arr_e, edge_ids)
-        out_w = jax.vmap(
-            lambda c, pls, ple, b, sl, r: _worker_etr_summaries(
-                c, pls, ple, b, sl, r, op, backward)
-        )(cnt_w, perm_ls, perm_le, base, seg_len, ranks)
-        summ = _scatter_rows(out_w, src_eids, n2e)
-        return jax.lax.psum(summ, "workers")
 
-    return _shard_map_call(
-        n_devices, shard_fn,
-        (pdev["edge_ids"], pdev["etr_perm_local_s"], pdev["etr_perm_local_e"],
-         pdev["etr_src_base"], pdev["etr_src_len"], ranks_w,
-         pdev["etr_src_eids"]),
-        (arrivals_e,))
+def _exchange_etr(out_w, pdev, axis_name):
+    """The ETR boundary exchange: producers route each summary to the edge's
+    owner — self-consumed summaries by local copy, boundary summaries (cut
+    segments) point-to-point.  Returns the per-owned-edge summary buffer
+    [Wl, Emax, *TS]."""
+    e_max = pdev["edge_ids"].shape[1]
+    return SS.p2p_exchange(out_w, pdev["etr_local_slot"],
+                           pdev["etr_send_slot"], pdev["etr_recv_slot"],
+                           e_max, axis_name)
+
+
+def _etr_apply_sources(summ_flat, vm, vv, tsrc_flat, mode: int):
+    """Intermediate vertex predicate at the owned edges' source vertices
+    (replicated elementwise compute, no exchange)."""
+    if mode == MODE_STATIC:
+        return summ_flat * vm[tsrc_flat].astype(jnp.float32)
+    if mode == MODE_BUCKET:
+        return summ_flat * (vm[:, None] & vv)[tsrc_flat].astype(jnp.float32)
+    return SS.apply_validity(summ_flat, vm[tsrc_flat], vv[tsrc_flat], mode)
+
+
+def _etr_hop_p2p(gdev, pdev, cnt_prev_w, vm, vv, wmask, evalid, op: int,
+                 backward: bool, mode: int, axis_name):
+    """One ETR superstep on owner-local state: produce → exchange →
+    consumer edge apply + local delivery."""
+    edge_ids = pdev["edge_ids"]
+    Wl, Emax = edge_ids.shape
+    v_max = pdev["own_ids"].shape[1]
+    out_w = _etr_produce_w(cnt_prev_w, gdev, pdev, op, backward)
+    summ_w = _exchange_etr(out_w, pdev, axis_name)          # [Wl, Emax, *TS]
+    flat = lambda a: a.reshape((Wl * Emax,) + a.shape[2:])
+    tsrc_flat = _shard_rows(gdev["t_src"], edge_ids).reshape(-1)
+    sv = _etr_apply_sources(flat(summ_w), vm, vv, tsrc_flat, mode)
+    ev_flat = None if evalid is None else flat(_shard_rows(evalid, edge_ids))
+    cnt = SS.apply_edge(sv, flat(_shard_rows(wmask, edge_ids)), ev_flat, mode)
+    cnt_w = cnt.reshape((Wl, Emax) + cnt.shape[1:])
+    arrivals_w = jax.vmap(
+        lambda c, d: SS.deliver(c, d, v_max + 1)
+    )(cnt_w, pdev["dst_local"])[:, :v_max]
+    return cnt_w, arrivals_w
 
 
 # =========================================================================
@@ -306,7 +276,7 @@ def _etr_summaries(gdev, pdev, arrivals_e, op: int, backward: bool,
 def run_segment_partitioned(
     gdev: dict,
     pdev: dict,
-    n_devices: int,
+    axis_name: Optional[str],
     v_preds: Sequence[Q.VertexPredicate],
     e_preds: Sequence[Q.EdgePredicate],
     params,
@@ -319,28 +289,39 @@ def run_segment_partitioned(
     minmax_op: int = Q.AGG_MIN,
     minmax_col=None,
 ) -> SegmentResult:
-    """Partitioned twin of engine.run_segment; arrivals returned in GLOBAL
-    space so the shared plan/join skeleton applies unchanged."""
+    """Partitioned twin of engine.run_segment on owner-local state.
+
+    ``axis_name`` names the shard_map mesh axis the worker dimension is
+    sharded over (None = single-device vmap simulation).  Per-hop state
+    never leaves the workers except through the point-to-point exchange;
+    the GLOBAL views the shared plan/join skeleton needs are published once
+    at segment end (the only psum on the distributed path)."""
     V = gdev["v_life"].shape[0]
+    n2e = gdev["t_dst"].shape[0]
     stats: List[dict] = []
     bedges = SS.current_bedges()
+    own_ids = pdev["own_ids"]
+    Wl, Vmax = own_ids.shape
 
     vm, vv = SS.eval_predicate(
         gdev["vprops"], gdev["v_type"], gdev["v_life"], v_preds[0].vtype,
         v_preds[0].clauses, params, pbases_v[0], mode, bedges,
     )
-    # init state lives sharded on its owners; the published global view is
-    # what the first hop's halo gathers read.
-    sv_global = SS.init_state(vm, vv, mode, n_buckets)
+    vm_w, vv_w = _gather_vpred_w(vm, vv, own_ids)
+    state = SS.init_state(vm_w, vv_w, mode, n_buckets)
+    state_w = state.reshape((Wl, Vmax) + state.shape[1:])
     stats.append(dict(phase="init", matched=jnp.sum(vm)))
 
-    mch_global = None   # global [V] view of the extremum channel
+    mch_w = None   # owner-local extremum channel [Wl, Vmax]
     if with_minmax:
         vals0, _ = minmax_col
-        mch_global = SS.minmax_seed(sv_global, vals0, minmax_op, mode)
+        g = _shard_rows(vals0, own_ids)
+        mch = SS.minmax_seed(state, g.reshape((Wl * Vmax,) + g.shape[2:]),
+                             minmax_op, mode)
+        mch_w = mch.reshape(Wl, Vmax)
 
-    arrivals_e = None   # global [2E, *TS] view of the last hop's messages
-    arrivals_v = None   # global [V, *TS] view of the last delivery
+    cnt_w = None       # owner-local per-edge counts of the last hop
+    arrivals_w = None  # owner-local last delivery [Wl, Vmax, *TS]
     for i, ep in enumerate(e_preds):
         wmask, evalid = SS.edge_predicate_weights(
             gdev, ep, params, pbases_e[i], mode, bedges)
@@ -354,44 +335,72 @@ def run_segment_partitioned(
             if with_minmax:
                 raise NotImplementedError(
                     "min/max aggregation across ETR hops")
-            # ETR hop: segment owners produce rank summaries from LOCAL
-            # prefix tables; only boundary summaries cross partitions.
-            src_cnt = _etr_summaries(gdev, pdev, arrivals_e, ep.etr_op,
-                                     backward, n_devices)
-            # intermediate vertex predicate at the current edges' sources
-            # (replicated elementwise compute, no exchange)
-            if mode == MODE_STATIC:
-                sv_edges = src_cnt * vm[gdev["t_src"]].astype(jnp.float32)
-            elif mode == MODE_BUCKET:
-                sv_edges = src_cnt * (vm[:, None] & vv)[gdev["t_src"]].astype(
-                    jnp.float32)
-            else:
-                sv_edges = SS.apply_validity(src_cnt, vm[gdev["t_src"]],
-                                             vv[gdev["t_src"]], mode)
-            # consumer side: edge apply + delivery on the owned slice.
-            ew = _shard_rows(sv_edges, pdev["edge_ids"])
-            W, Emax = pdev["edge_ids"].shape
-            v_max = pdev["own_ids"].shape[1]
-            flat = lambda a: a.reshape((W * Emax,) + a.shape[2:])
-            ev_flat = None if evalid is None else flat(
-                _shard_rows(evalid, pdev["edge_ids"]))
-            cnt = SS.apply_edge(flat(ew), flat(_shard_rows(wmask,
-                                                           pdev["edge_ids"])),
-                                ev_flat, mode)
-            cnt_w = cnt.reshape((W, Emax) + cnt.shape[1:])
-            arr_w = jax.vmap(lambda c, d: SS.deliver(c, d, v_max + 1))(
-                cnt_w, pdev["dst_local"])[:, :v_max]
-            arrivals_e, arrivals_v, _ = _publish(cnt_w, arr_w, pdev,
-                                                 gdev["t_dst"].shape[0], V)
+            cnt_w, arrivals_w = _etr_hop_p2p(
+                gdev, pdev, cnt_w, vm, vv, wmask, evalid, ep.etr_op,
+                backward, mode, axis_name)
         else:
             if i > 0:
-                sv_global = SS.apply_validity(arrivals_v, vm, vv, mode)
-            arrivals_e, arrivals_v, mch_global = _run_hop(
-                gdev, pdev, sv_global, wmask, evalid, mode, n_devices,
-                mch_global, minmax_op)
+                vm_w, vv_w = _gather_vpred_w(vm, vv, own_ids)
+                av = arrivals_w.reshape((Wl * Vmax,) + arrivals_w.shape[2:])
+                state = SS.apply_validity(av, vm_w, vv_w, mode)
+                state_w = state.reshape((Wl, Vmax) + state.shape[1:])
+            cnt_w, arrivals_w, mch_w = _local_hop_p2p(
+                state_w, wmask, evalid, pdev, mode, axis_name,
+                mch_w, minmax_op)
         stats.append(dict(phase=f"hop{i}", matched_edges=jnp.sum(wmask)))
 
-    return SegmentResult(arrivals_e, arrivals_v, stats, mch_global)
+    # publish the segment's GLOBAL views (the skeleton joins in global
+    # space); under shard_map the partial scatters combine with one psum
+    # (pmin/pmax for the extremum channel) — once per segment, not per hop.
+    arrivals_e = _scatter_rows(cnt_w, pdev["edge_ids"], n2e)
+    arrivals_v = _scatter_rows(arrivals_w, pdev["own_ids"], V)
+    mch_g = None
+    if mch_w is not None:
+        mch_g = _scatter_rows(mch_w, pdev["own_ids"], V,
+                              fill=SS.minmax_neutral(minmax_op))
+    if axis_name is not None:
+        arrivals_e = jax.lax.psum(arrivals_e, axis_name)
+        arrivals_v = jax.lax.psum(arrivals_v, axis_name)
+        if mch_g is not None:
+            combine = (jax.lax.pmin if minmax_op == Q.AGG_MIN
+                       else jax.lax.pmax)
+            mch_g = combine(mch_g, axis_name)
+    return SegmentResult(arrivals_e, arrivals_v, stats, mch_g)
+
+
+# =========================================================================
+# shard_map wrapper (whole-plan, one dispatch)
+# =========================================================================
+def _get_shard_map():
+    try:  # moved out of experimental in newer jax
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+    import inspect
+    # the replication-check kwarg was renamed check_rep → check_vma; detect
+    # from the signature, not from where the import succeeded
+    rep_kw = ("check_vma" if "check_vma" in
+              inspect.signature(shard_map).parameters else "check_rep")
+    return shard_map, rep_kw
+
+
+def _wrap_shard_map(body, n_devices: int):
+    """shard_map a whole traced plan ``body(gdev, pdev, params, bedges)``:
+    the per-worker tables are sharded over the ``workers`` mesh axis, the
+    graph tables/params replicated, the outputs replicated (identical on
+    every device after the segment-end psum)."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..launch.mesh import make_worker_mesh
+
+    shard_map, rep_kw = _get_shard_map()
+    mesh = make_worker_mesh(n_devices)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P("workers"), P(), P()),
+        out_specs=P(),
+        **{rep_kw: False},
+    )
 
 
 # =========================================================================
@@ -423,12 +432,35 @@ def partition_for(graph: TemporalGraph, n_workers: int,
     return hit
 
 
-def _resolve_n_devices(requested: Optional[bool], n_workers: int) -> int:
-    """How many devices to shard the worker axis over (1 = vmap simulation)."""
+def resolve_n_devices(requested: Optional[bool], n_workers: int) -> int:
+    """How many devices to shard the worker axis over (1 = vmap simulation).
+    ``requested`` is the user's ``use_shard_map`` tri-state: False forces the
+    simulation, None/True shard when devices exist and divide the workers."""
     nd = jax.device_count()
     if requested is False or nd <= 1 or n_workers % nd != 0:
         return 1
     return nd
+
+
+def _plan_fn(qry, split, mode, n_buckets, n_devices, batched: bool = False):
+    """Build the jitted (possibly shard_mapped) plan callable — the ONE
+    construction both the sequential ``execute`` and the serving
+    ``batch_executable`` entries share.  ``batched`` vmaps the params axis;
+    on the sharded path that vmap sits INSIDE the shard_map body, so one
+    dispatch runs (batch × workers) on the device mesh."""
+    def plan(gd, pd, params, be, axis_name):
+        runner = partial(run_segment_partitioned, gd, pd, axis_name)
+        out = execute_plan_traced(gd, qry, split, mode, n_buckets, params,
+                                  be, segment_runner=runner)
+        return out.total, out.per_vertex, out.minmax
+
+    axis = None if n_devices <= 1 else "workers"
+    body = lambda gd, pd, p, be: plan(gd, pd, p, be, axis)
+    if batched:
+        body = jax.vmap(body, in_axes=(None, None, 0, None))
+    if n_devices <= 1:
+        return jax.jit(body)
+    return jax.jit(_wrap_shard_map(body, n_devices))
 
 
 def execute(
@@ -444,14 +476,15 @@ def execute(
     """Partition-sharded execution; identical results to ``engine.execute``.
 
     ``n_workers`` selects the two-level partitioning (cached per graph).
-    When >1 JAX devices exist and divide ``n_workers``, the worker axis runs
-    under shard_map on a device mesh; otherwise it is vmapped on one device.
+    When >1 JAX devices exist and divide ``n_workers``, the whole plan runs
+    under shard_map on a ``workers`` device mesh (point-to-point exchange
+    between supersteps); otherwise the worker axis is vmapped on one device.
     """
     if split is None:
         split = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1
     gdev = _prepare_gdev(graph)
     _, arrays, pdev = partition_for(graph, n_workers, parts_per_type)
-    n_devices = _resolve_n_devices(use_shard_map, n_workers)
+    n_devices = resolve_n_devices(use_shard_map, n_workers)
     bedges = jnp.asarray(
         iv.bucket_edges(graph.lifespan[0], graph.lifespan[1], n_buckets)
     )
@@ -459,13 +492,7 @@ def execute(
            arrays.v_max, n_devices)
     fn = _JIT_CACHE.get(key)
     if fn is None:
-        def traced(gd, pd, params, be):
-            runner = partial(run_segment_partitioned, gd, pd, n_devices)
-            out = execute_plan_traced(gd, qry, split, mode, n_buckets, params,
-                                      be, segment_runner=runner)
-            return out.total, out.per_vertex, out.minmax
-
-        fn = jax.jit(traced)
+        fn = _plan_fn(qry, split, mode, n_buckets, n_devices)
         _JIT_CACHE[key] = fn
     params = jnp.asarray(Q.query_params(qry))
     total, per_vertex, minmax = fn(gdev, pdev, params, bedges)
@@ -478,6 +505,25 @@ def count_results(graph, qry, **kw) -> float:
     return float(t.sum()) if t.ndim else float(t)
 
 
+def query_exchange_volumes(qry: Q.PathQuery, arrays) -> Dict[str, int]:
+    """Structural per-query boundary volume per channel on the p2p lanes —
+    the CANONICAL statement of what each hop exchanges (benchmarks and tests
+    import this; the planner's ``estimate_segment`` m_net term applies the
+    same rule per step).  Mirrors the plan skeleton: aggregates run the
+    reversed segment, MIN/MAX ride the extremum channel on every plain hop,
+    ETR hops ship only the boundary rank summaries."""
+    state = extremum = etr = 0
+    minmax = qry.agg_op in (Q.AGG_MIN, Q.AGG_MAX)
+    for ep in qry.e_preds:
+        if ep.etr_op != -1:
+            etr += arrays.etr_exchange_volume()
+        else:
+            state += arrays.exchange_volume()
+            if minmax:
+                extremum += arrays.exchange_volume()
+    return dict(state=state, extremum=extremum, etr=etr)
+
+
 def batch_executable(
     graph: TemporalGraph,
     qry: Q.PathQuery,
@@ -486,35 +532,32 @@ def batch_executable(
     n_buckets: int = 16,
     n_workers: int = 4,
     parts_per_type: Optional[int] = None,
+    use_shard_map: Optional[bool] = None,
 ):
     """Compiled batched entry on the DISTRIBUTED path: the whole superstep
-    pipeline (halo gather → local delivery → boundary exchange) runs with a
-    query-batch leading axis, vmapped over the packed parameter tensor — one
-    partitioned traversal sweep serves the entire same-shape batch.
+    pipeline (p2p halo exchange → local delivery → segment-end publish) runs
+    with a query-batch leading axis — one partitioned traversal sweep serves
+    the entire same-shape batch.
 
     Returns ``run(params[B, n_clauses, 3]) -> ExecOutput`` with a leading
-    query axis on every field.  The worker axis always runs in the vmap
-    simulation here (a query-batch vmap around shard_map is not supported);
-    sharded multi-device serving is a ROADMAP follow-on.
+    query axis on every field.  With >1 devices dividing ``n_workers`` the
+    batch axis is vmapped INSIDE the shard_map body, so ONE dispatch runs
+    (batch × workers) on the device mesh; otherwise the worker axis runs in
+    the (bit-identical) single-device vmap simulation.
     """
     if split is None:
         split = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1
     gdev = _prepare_gdev(graph)
     _, arrays, pdev = partition_for(graph, n_workers, parts_per_type)
+    n_devices = resolve_n_devices(use_shard_map, n_workers)
     bedges = jnp.asarray(
         iv.bucket_edges(graph.lifespan[0], graph.lifespan[1], n_buckets)
     )
     key = ("batch", id(graph), qry.shape_key(), split, mode, n_buckets,
-           n_workers, arrays.v_max)
+           n_workers, arrays.v_max, n_devices)
     fn = _JIT_CACHE.get(key)
     if fn is None:
-        def one(gd, pd, params, be):
-            runner = partial(run_segment_partitioned, gd, pd, 1)
-            out = execute_plan_traced(gd, qry, split, mode, n_buckets, params,
-                                      be, segment_runner=runner)
-            return out.total, out.per_vertex, out.minmax
-
-        fn = jax.jit(jax.vmap(one, in_axes=(None, None, 0, None)))
+        fn = _plan_fn(qry, split, mode, n_buckets, n_devices, batched=True)
         _JIT_CACHE[key] = fn
 
     def run(params) -> ExecOutput:
@@ -532,12 +575,13 @@ def execute_batch_out(
     n_buckets: int = 16,
     n_workers: int = 4,
     parts_per_type: Optional[int] = None,
+    use_shard_map: Optional[bool] = None,
 ) -> ExecOutput:
     """Batched partitioned execution of same-shape instances."""
     from .engine import check_batch_shape
     check_batch_shape(queries)
     run = batch_executable(graph, queries[0], split, mode, n_buckets,
-                           n_workers, parts_per_type)
+                           n_workers, parts_per_type, use_shard_map)
     params = np.stack([Q.query_params(q) for q in queries])
     return run(params)
 
@@ -547,9 +591,10 @@ def execute_batch_out(
 # =========================================================================
 @dataclasses.dataclass
 class SuperstepProfile:
-    times_s: np.ndarray        # float64[n_hops, W] — measured local-hop time
-    exchange_msgs: np.ndarray  # int64[n_hops] — boundary messages that hop
-    total: float               # query total (sanity cross-check)
+    times_s: np.ndarray            # float64[n_hops, W] — measured local-hop time
+    exchange_msgs: np.ndarray      # int64[n_hops] — boundary messages (all channels)
+    exchange_channels: np.ndarray  # int64[n_hops, 3] — per CHANNELS breakdown
+    total: float                   # query total (sanity cross-check)
 
     @property
     def makespan_s(self) -> np.ndarray:
@@ -561,16 +606,23 @@ class SuperstepProfile:
         per_worker = self.times_s.sum(axis=0)
         return float(per_worker.mean() / max(per_worker.max(), 1e-12))
 
+    def channel_totals(self) -> Dict[str, int]:
+        """Whole-query boundary volume per exchange channel."""
+        sums = self.exchange_channels.sum(axis=0)
+        return {name: int(sums[i]) for i, name in enumerate(CHANNELS)}
+
 
 _PROFILE_CACHE: Dict[tuple, dict] = {}
 
 
 def _profile_fns(qry: Q.PathQuery, mode: int, n_buckets: int, v_max: int,
-                 pv, pe) -> dict:
+                 v_preds, e_preds, pv, pe, backward: bool,
+                 with_minmax: bool, minmax_op: int) -> dict:
     """Jitted helpers for measure_supersteps, cached per (query shape, mode,
     buckets, padded worker extent) so repeated profiling of one template
     (weak_scaling, fit_cost_model) re-traces nothing.  All graph data is
     passed as arguments; only static query structure is baked in."""
+    # shape_key() covers agg_op/agg_key, i.e. the full profiled structure
     key = (qry.shape_key(), mode, n_buckets, v_max)
     fns = _PROFILE_CACHE.get(key)
     if fns is not None:
@@ -579,7 +631,7 @@ def _profile_fns(qry: Q.PathQuery, mode: int, n_buckets: int, v_max: int,
     def vpred(i):
         def f(gd, prm, be):
             with SS.bucket_scope(be):
-                vp = qry.v_preds[i]
+                vp = v_preds[i]
                 return SS.eval_predicate(gd["vprops"], gd["v_type"],
                                          gd["v_life"], vp.vtype, vp.clauses,
                                          prm, pv[i], mode, be)
@@ -588,84 +640,122 @@ def _profile_fns(qry: Q.PathQuery, mode: int, n_buckets: int, v_max: int,
     def hop_masks(i):
         def f(gd, prm, be):
             with SS.bucket_scope(be):
-                return SS.edge_predicate_weights(gd, qry.e_preds[i], prm,
+                return SS.edge_predicate_weights(gd, e_preds[i], prm,
                                                  pe[i], mode, be)
         return jax.jit(f)
 
-    def etr_mask(i):
-        def f(gd, summ, m, v, be):
-            with SS.bucket_scope(be):
-                if mode == MODE_STATIC:
-                    return summ * m[gd["t_src"]].astype(jnp.float32)
-                if mode == MODE_BUCKET:
-                    return summ * (m[:, None] & v)[gd["t_src"]].astype(
-                        jnp.float32)
-                return SS.apply_validity(summ, m[gd["t_src"]], v[gd["t_src"]],
-                                         mode)
-        return jax.jit(f)
+    @jax.jit
+    def init_fn(m, v, own, be):
+        with SS.bucket_scope(be):
+            Wl, Vmax = own.shape
+            m_w, v_w = _gather_vpred_w(m, v if v.ndim else None, own)
+            st = SS.init_state(m_w, v_w, mode, n_buckets)
+            return st.reshape((Wl, Vmax) + st.shape[1:])
 
     @jax.jit
-    def apply_vv(av, m, v, be):
+    def seed_mch(state_w, vals0, own):
+        Wl, Vmax = own.shape
+        g = _shard_rows(vals0, own)
+        st = state_w.reshape((Wl * Vmax,) + state_w.shape[2:])
+        mch = SS.minmax_seed(st, g.reshape((Wl * Vmax,) + g.shape[2:]),
+                             minmax_op, mode)
+        return mch.reshape(Wl, Vmax)
+
+    @jax.jit
+    def apply_vv_w(arr_w, m, v, own, be):
         with SS.bucket_scope(be):
-            return SS.apply_validity(av, m, v, mode)
+            Wl, Vmax = own.shape
+            m_w, v_w = _gather_vpred_w(m, v if v.ndim else None, own)
+            st = SS.apply_validity(
+                arr_w.reshape((Wl * Vmax,) + arr_w.shape[2:]), m_w, v_w, mode)
+            return st.reshape((Wl, Vmax) + st.shape[1:])
+
+    # the UNTIMED exchanges: point-to-point lane moves between supersteps
+    @jax.jit
+    def exchange_state_fn(state_w, pd):
+        return _exchange_state(state_w, pd, None)
+
+    @jax.jit
+    def exchange_mch_fn(mch_w, pd):
+        return _exchange_state(mch_w, pd, None,
+                               fill=SS.minmax_neutral(minmax_op))
 
     # ONE compiled local-hop executable reused for every (hop, worker): each
-    # worker's tables arrive with a leading axis of 1 so shapes agree.
+    # worker's tables arrive with a leading axis of 1 so shapes agree.  The
+    # halo buffer arrives pre-exchanged; the TIMED work is the local gather,
+    # edge apply and delivery — the per-worker compute a real deployment's
+    # straggler/makespan comes from.
     @jax.jit
-    def one_worker_hop(sv_g, wm, ev, own, eids, dloc, hids, shalo, be):
+    def one_worker_hop(halo_1, wm, ev, eids, dloc, shalo, mch_halo, be):
         with SS.bucket_scope(be):
-            cnt_w, arr_w, _ = _local_hop(sv_g, wm, ev if ev.ndim else None,
-                                         own, eids, dloc, hids, shalo, mode)
-            return cnt_w, arr_w
+            e_max = eids.shape[1]
+            src_val = _halo_gather(halo_1, shalo)
+            flatten = lambda a: a.reshape((e_max,) + a.shape[2:])
+            evf = None if not ev.ndim else flatten(_shard_rows(ev, eids))
+            cnt = SS.apply_edge(flatten(src_val),
+                                flatten(_shard_rows(wm, eids)), evf, mode)
+            arr = SS.deliver(cnt, dloc[0], v_max + 1)[:v_max]
+            if mch_halo.ndim:
+                m_src = _halo_gather(mch_halo, shalo)
+                m_e = SS.minmax_edge(flatten(m_src), cnt, minmax_op, mode)
+                mch = SS.deliver_extremum(m_e, dloc[0], v_max + 1,
+                                          minmax_op)[:v_max][None]
+            else:
+                mch = jnp.zeros((), jnp.float32)
+            return cnt[None], arr[None], mch
 
     # ETR producer body: segment-local prefix tables over the worker's owned
     # prev-hop counts → rank summaries for the edges whose source it owns.
     def etr_produce(i):
-        op = qry.e_preds[i].etr_op
+        op = e_preds[i].etr_op
 
-        def f(arr_e, eids, pls, ple, base, slen, ranks, be, _backward=False):
+        def f(cnt_1, pls, ple, base, slen, ranks, be):
             with SS.bucket_scope(be):
-                cnt_w = _shard_rows(arr_e, eids)[0]
-                return _worker_etr_summaries(cnt_w, pls[0], ple[0], base[0],
-                                             slen[0], ranks[0], op,
-                                             _backward)[None]
+                return _worker_etr_summaries(cnt_1[0], pls[0], ple[0],
+                                             base[0], slen[0], ranks[0], op,
+                                             backward)[None]
         return jax.jit(f)
 
-    # ETR consumer body: the received summaries are the exchanged state; the
-    # local part is edge apply + delivery.
     @jax.jit
-    def one_worker_etr(sved, wm, ev, eids, dloc, be):
+    def exchange_etr_fn(out_w, pd):
+        return _exchange_etr(out_w, pd, None)
+
+    # ETR consumer body: the received summaries are the exchanged state; the
+    # local part is source-predicate apply + edge apply + delivery.
+    @jax.jit
+    def one_worker_etr(summ_1, m, v, tsrc, wm, ev, eids, dloc, be):
         with SS.bucket_scope(be):
-            ew = _shard_rows(sved, eids)
             e_max = eids.shape[1]
             flatten = lambda a: a.reshape((e_max,) + a.shape[2:])
+            sv = _etr_apply_sources(flatten(summ_1), m,
+                                    v if v.ndim else None,
+                                    _shard_rows(tsrc, eids).reshape(-1), mode)
             evf = None if not ev.ndim else flatten(_shard_rows(ev, eids))
-            cnt = SS.apply_edge(flatten(ew), flatten(_shard_rows(wm, eids)),
-                                evf, mode)
+            cnt = SS.apply_edge(sv, flatten(_shard_rows(wm, eids)), evf, mode)
             arr = SS.deliver(cnt, dloc[0], v_max + 1)[:v_max]
             return cnt[None], arr[None]
 
     @jax.jit
-    def init_fn(m, v, be):
+    def total_fn(arr_w, own, m, v, be):
         with SS.bucket_scope(be):
-            return SS.init_state(m, v, mode, n_buckets)
-
-    @jax.jit
-    def total_fn(av, m, v, be):
-        with SS.bucket_scope(be):
-            return SS.state_total(SS.apply_validity(av, m, v, mode), mode)
+            V = m.shape[0]
+            av = _scatter_rows(arr_w, own, V)
+            return SS.state_total(
+                SS.apply_validity(av, m, v if v.ndim else None, mode), mode)
 
     fns = dict(
-        vpred=[vpred(i) for i in range(qry.n_vertices)],
-        hop_masks=[hop_masks(i) for i in range(len(qry.e_preds))],
-        etr_mask=[etr_mask(i) if ep.etr_op != -1 else None
-                  for i, ep in enumerate(qry.e_preds)],
+        vpred=[vpred(i) for i in range(len(v_preds))],
+        hop_masks=[hop_masks(i) for i in range(len(e_preds))],
         etr_produce=[etr_produce(i) if ep.etr_op != -1 else None
-                     for i, ep in enumerate(qry.e_preds)],
-        apply_vv=apply_vv,
+                     for i, ep in enumerate(e_preds)],
+        init_fn=init_fn,
+        seed_mch=seed_mch,
+        apply_vv_w=apply_vv_w,
+        exchange_state_fn=exchange_state_fn,
+        exchange_mch_fn=exchange_mch_fn,
+        exchange_etr_fn=exchange_etr_fn,
         one_worker_hop=one_worker_hop,
         one_worker_etr=one_worker_etr,
-        init_fn=init_fn,
         total_fn=total_fn,
     )
     _PROFILE_CACHE[key] = fns
@@ -683,17 +773,23 @@ def measure_supersteps(
 ) -> SuperstepProfile:
     """Measured (not modelled) per-worker superstep times.
 
-    Runs the left-to-right plan (split = n−1) hop by hop, executing each
-    worker's local compute SEPARATELY through one compiled single-worker hop
-    function and timing it with block_until_ready — the per-(hop, worker)
-    wall times a real deployment's straggler/makespan comes from.  ETR hops
-    time both the producer (segment-local rank-summary prefix tables) and
-    consumer (edge apply + delivery) halves per worker.  The exchange
-    (scatter/halo republish) runs between timings, untimed; its volume is
-    the halo ghost count on plain hops and the boundary rank-summary count
-    (``PartitionArrays.etr_exchange_volume``) on ETR hops.
+    Plain-count queries profile the left-to-right plan (split = n−1); COUNT
+    and MIN/MAX aggregates profile the reversed segment (split = 0, the plan
+    aggregates run), with MIN/MAX threading the extremum channel through
+    every hop — so all three boundary channels are measurable.  Each
+    worker's local compute runs SEPARATELY through one compiled
+    single-worker hop function and is timed with block_until_ready; the
+    point-to-point exchange (state / extremum / ETR rank-summary lanes) runs
+    between timings, untimed, and its per-channel ragged volume is reported
+    in ``exchange_channels`` (halo ghosts for state and extremum, boundary
+    rank summaries — cut edges — for ETR).
     """
-    assert qry.agg_op == Q.AGG_NONE, "profile plain path counts"
+    want_minmax = qry.agg_op in (Q.AGG_MIN, Q.AGG_MAX)
+    if want_minmax and any(ep.etr_op != -1 for ep in qry.e_preds):
+        # same rejection as every executor: a profile of an unrunnable plan
+        # would silently poison the θ_net fit population
+        raise NotImplementedError("min/max aggregation across ETR hops")
+    backward = qry.agg_op != Q.AGG_NONE
     gdev = _prepare_gdev(graph)
     _, arrays, pdev = partition_for(graph, n_workers, parts_per_type)
     W = arrays.n_workers
@@ -703,16 +799,22 @@ def measure_supersteps(
     )
     params = jnp.asarray(Q.query_params(qry))
     pv, pe = _pbases(qry)
-    n_hops = len(qry.e_preds)
-    V = graph.n_vertices
-    n2e = 2 * graph.n_edges
+    n = qry.n_vertices
+    if backward:
+        # the aggregate plan's (reversed) segment, params rows mapped back
+        # to the original packing — same mapping as execute_plan_traced
+        rev = qry.reversed()
+        v_preds, e_preds = rev.v_preds, rev.e_preds
+        pv = [pv[n - 1 - i] for i in range(n)]
+        pe = [pe[n - 2 - j] for j in range(n - 1)]
+    else:
+        v_preds, e_preds = qry.v_preds, qry.e_preds
+    n_hops = len(e_preds)
 
-    fns = _profile_fns(qry, mode, n_buckets, v_max, pv, pe)
+    fns = _profile_fns(qry, mode, n_buckets, v_max, v_preds, e_preds, pv, pe,
+                       backward, want_minmax, qry.agg_op)
     vpred, hop_masks = fns["vpred"], fns["hop_masks"]
-    apply_vv, one_worker_hop = fns["apply_vv"], fns["one_worker_hop"]
-    one_worker_etr, init_fn = fns["one_worker_etr"], fns["init_fn"]
-    etr_mask, etr_produce = fns["etr_mask"], fns["etr_produce"]
-    total_fn = fns["total_fn"]
+    etr_produce = fns["etr_produce"]
     ranks_w = _ranks_for_produced(gdev, pdev)
 
     def _timed(fn, *args):
@@ -724,32 +826,37 @@ def measure_supersteps(
             best = min(best, time.perf_counter() - t0)
         return best, out
 
-    # ev=None can't cross jit; encode "no validity" as a 0-d placeholder.
-    no_ev = jnp.zeros((), jnp.float32)
+    # ev/vv=None can't cross jit; encode "absent" as a 0-d placeholder.
+    nul = jnp.zeros((), jnp.float32)
 
     times = np.zeros((n_hops, W))
-    exchange = np.zeros(n_hops, np.int64)
+    channels = np.zeros((n_hops, len(CHANNELS)), np.int64)
+    n_ghost = int(arrays.n_ghost.sum())
+    n_etr_ghost = int(arrays.n_src_ghost.sum())
 
     vm, vv = vpred[0](gdev, params, bedges)
-    sv_global = init_fn(vm, vv, bedges)
-    arrivals_e = None
-    arrivals_v = None
-    for i, ep in enumerate(qry.e_preds):
+    vv_arg = nul if vv is None else vv
+    state_w = fns["init_fn"](vm, vv_arg, pdev["own_ids"], bedges)
+    mch_w = None
+    if want_minmax:
+        vals0, _ = gdev["vprops"][qry.agg_key]
+        mch_w = fns["seed_mch"](state_w, vals0, pdev["own_ids"])
+    cnt_w = None
+    arrivals_w = None
+    for i, ep in enumerate(e_preds):
         wmask, evalid = hop_masks[i](gdev, params, bedges)
-        ev_arg = no_ev if evalid is None else evalid
+        ev_arg = nul if evalid is None else evalid
         if i > 0:
             vm, vv = vpred[i](gdev, params, bedges)
-        cnt_rows, arr_rows = [], []
+            vv_arg = nul if vv is None else vv
+        cnt_rows, arr_rows, mch_rows = [], [], []
         if ep.etr_op != -1:
-            # rank-prefix exchange: each owner's summary production over its
-            # LOCAL prefix tables is timed as part of that worker's superstep;
-            # only the boundary summaries (producer ≠ consumer) count as
-            # cross-partition traffic — O(cut edges), not O(frontier).
+            # producer half: each owner's summary production over its LOCAL
+            # prefix tables is timed as part of that worker's superstep
             summ_rows = []
             for w in range(W):
                 t_prod, ow = _timed(
-                    etr_produce[i], arrivals_e,
-                    pdev["edge_ids"][w: w + 1],
+                    etr_produce[i], cnt_w[w: w + 1],
                     pdev["etr_perm_local_s"][w: w + 1],
                     pdev["etr_perm_local_e"][w: w + 1],
                     pdev["etr_src_base"][w: w + 1],
@@ -757,13 +864,15 @@ def measure_supersteps(
                     ranks_w[w: w + 1], bedges)
                 times[i, w] = t_prod
                 summ_rows.append(ow)
-            summ = _scatter_rows(jnp.concatenate(summ_rows, axis=0),
-                                 pdev["etr_src_eids"], n2e)
-            sv_edges = etr_mask[i](gdev, summ, vm, vv, bedges)
-            exchange[i] = int(arrays.n_src_ghost.sum())
+            # rank-summary exchange (untimed): only boundary summaries —
+            # producer ≠ consumer, O(cut edges) — are cross-partition traffic
+            summ_w = fns["exchange_etr_fn"](
+                jnp.concatenate(summ_rows, axis=0), pdev)
+            channels[i, 2] = n_etr_ghost
             for w in range(W):
                 t_best, (cw, aw) = _timed(
-                    one_worker_etr, sv_edges, wmask, ev_arg,
+                    fns["one_worker_etr"], summ_w[w: w + 1], vm, vv_arg,
+                    gdev["t_src"], wmask, ev_arg,
                     pdev["edge_ids"][w: w + 1], pdev["dst_local"][w: w + 1],
                     bedges)
                 times[i, w] += t_best
@@ -771,22 +880,35 @@ def measure_supersteps(
                 arr_rows.append(aw)
         else:
             if i > 0:
-                sv_global = apply_vv(arrivals_v, vm, vv, bedges)
-            exchange[i] = int(arrays.n_ghost.sum())
+                state_w = fns["apply_vv_w"](arrivals_w, vm, vv_arg,
+                                            pdev["own_ids"], bedges)
+            # state (+ extremum) exchange (untimed): ghost entries only
+            halo_w = fns["exchange_state_fn"](state_w, pdev)
+            channels[i, 0] = n_ghost
+            mch_halo_w = nul
+            if mch_w is not None:
+                mch_halo_w = fns["exchange_mch_fn"](mch_w, pdev)
+                channels[i, 1] = n_ghost
             for w in range(W):
-                t_best, (cw, aw) = _timed(
-                    one_worker_hop, sv_global, wmask, ev_arg,
-                    pdev["own_ids"][w: w + 1], pdev["edge_ids"][w: w + 1],
-                    pdev["dst_local"][w: w + 1], pdev["halo_ids"][w: w + 1],
-                    pdev["src_halo"][w: w + 1], bedges)
+                mh = mch_halo_w if not mch_halo_w.ndim else \
+                    mch_halo_w[w: w + 1]
+                t_best, (cw, aw, mw) = _timed(
+                    fns["one_worker_hop"], halo_w[w: w + 1], wmask, ev_arg,
+                    pdev["edge_ids"][w: w + 1], pdev["dst_local"][w: w + 1],
+                    pdev["src_halo"][w: w + 1], mh, bedges)
                 times[i, w] = t_best
                 cnt_rows.append(cw)
                 arr_rows.append(aw)
+                mch_rows.append(mw)
+            if mch_w is not None:
+                mch_w = jnp.concatenate(mch_rows, axis=0)
         cnt_w = jnp.concatenate(cnt_rows, axis=0)
-        arr_w = jnp.concatenate(arr_rows, axis=0)
-        arrivals_e, arrivals_v, _ = _publish(cnt_w, arr_w, pdev, n2e, V)
+        arrivals_w = jnp.concatenate(arr_rows, axis=0)
 
-    # final join: apply the last vertex predicate, total (sanity value)
-    vmf, vvf = vpred[qry.n_vertices - 1](gdev, params, bedges)
-    total = np.asarray(total_fn(arrivals_v, vmf, vvf, bedges))
-    return SuperstepProfile(times, exchange, float(total.sum()))
+    # final join: apply the segment-final vertex predicate, total (sanity)
+    vmf, vvf = vpred[len(v_preds) - 1](gdev, params, bedges)
+    total = np.asarray(fns["total_fn"](
+        arrivals_w, pdev["own_ids"], vmf,
+        nul if vvf is None else vvf, bedges))
+    return SuperstepProfile(times, channels.sum(axis=1), channels,
+                            float(total.sum()))

@@ -22,22 +22,25 @@ Two pieces:
 
    **Distribution-aware extension**: when the planner is given a
    ``Partitioning`` (graphdata.partitioner), per-superstep compute extents
-   are divided over the workers and a per-superstep exchange term
+   are divided over the workers and a per-superstep PER-CHANNEL exchange
+   term
 
-     θ_net · m_net_i
+     θ_net · m_state_i  +  θ_net_etr · m_etr_i
 
-   is added, where ``m_net_i`` is the STRUCTURAL boundary volume of that
-   superstep — the partitioner's halo ghost-entry count for plain hops
-   (doubled when the MIN/MAX extremum channel rides the exchange), the
-   boundary rank-summary count for ETR hops (cut edges, whose producers'
-   per-segment prefix tables live with the source-segment owner) — exactly
-   the volume the partitioned executor exchanges and the volume θ_net is
-   fitted against from measured partitioned supersteps
-   (engine_partitioned.measure_supersteps), keeping the model, the fit and
-   the executor in one unit (paper Sec. 5's communication phase).  Every
-   query class (plain counts, COUNT and MIN/MAX aggregates, ETR hops) is
-   costed on the distributed path — plan selection has no dense-only
-   fallback.
+   is added, where the m's are the STRUCTURAL boundary volumes of that
+   superstep on the executor's point-to-point exchange: ``m_state_i`` is the
+   partitioner's halo ghost-entry count for plain hops (doubled when the
+   MIN/MAX extremum channel rides the same lanes), ``m_etr_i`` the boundary
+   rank-summary count for ETR hops (cut edges, whose producers' per-segment
+   prefix tables live with the source-segment owner).  These are exactly the
+   ragged lane volumes the executor moves (``superstep.p2p_exchange``) and
+   the volumes the two θ_net coefficients are fitted against from measured
+   partitioned supersteps (engine_partitioned.measure_supersteps, whose
+   ``exchange_channels`` report the same three channels), keeping the model,
+   the fit and the executor in one unit (paper Sec. 5's communication
+   phase).  Every query class (plain counts, COUNT and MIN/MAX aggregates,
+   ETR hops) is costed on the distributed path — plan selection has no
+   dense-only fallback.
 
 What matters (paper Sec. 5): not absolute accuracy but *discriminating good
 plans from bad*.
@@ -62,7 +65,9 @@ DEFAULT_COEFFS = {
     "theta_etr": 8.0e-5,  # extra ms per edge on ETR hops (sort-prefix path)
     "theta_m": 2.0e-5,    # ms per estimated delivered message
     "theta_init": 2.0e-5, # ms per vertex evaluated at init
-    "theta_net": 8.0e-5,  # ms per cross-partition boundary message (exchange)
+    "theta_net": 8.0e-5,  # ms per boundary vertex-state entry (plain/extremum
+                          # channels of the point-to-point exchange)
+    "theta_net_etr": 8.0e-5,  # ms per boundary ETR rank summary (cut edges)
 }
 
 _COEFF_PATH = os.path.join(os.path.dirname(__file__), "..", "configs", "cost_coeffs.json")
@@ -191,13 +196,17 @@ def estimate_segment(
             if nxt_type >= 0
             else float(trav_arrivals_by_type.sum())
         )
-        # structural boundary volume of this hop: what the executor actually
-        # exchanges (and what θ_net was fitted on) — ETR hops ship only the
+        # structural boundary volume of this hop: what the executor's
+        # point-to-point exchange actually moves (and what the per-channel
+        # θ_net coefficients were fitted on) — ETR hops ship only the
         # boundary rank summaries of cut segments (see engine_partitioned)
         m_net = 0.0
+        theta_net = coeffs.get("theta_net", 0.0)
         if w > 1:
             if ep.etr_op != -1:
                 m_net = etr_exchange_volume
+                theta_net = coeffs.get("theta_net_etr",
+                                       coeffs.get("theta_net", 0.0))
             else:
                 m_net = exchange_volume * (2.0 if extremum_channel else 1.0)
         t = (
@@ -206,7 +215,7 @@ def estimate_segment(
                + coeffs["theta_e"] * e_slice
                + (coeffs["theta_etr"] * e_slice if ep.etr_op != -1 else 0.0)
                + coeffs["theta_m"] * max(m_e, 0.0)) / w
-            + coeffs.get("theta_net", 0.0) * m_net
+            + theta_net * m_net
         )
         steps.append(StepEstimate(a_v, f_v, m_v, a_e, f_e, m_e, t, V_sigma, e_slice,
                                   ep.etr_op != -1, m_net))

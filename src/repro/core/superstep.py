@@ -23,6 +23,11 @@ all three:
                                                    SEGMENT-LOCAL prefix tables
                                                    (the partitioned executor's
                                                    rank-summary exchange)
+  boundary exchange      p2p_exchange()          — ragged all-to-all over the
+                                                   worker axis: only ghost
+                                                   entries move (the
+                                                   partitioned executor's
+                                                   exchange, all channels)
   delivery               deliver()               — sorted segment-sum of
                                                    per-edge counts by arrival
   extremum channel       minmax_seed(), minmax_edge(), deliver_extremum()
@@ -348,6 +353,65 @@ def cells_to_buckets(state):
         m = ((s_ids <= b) & (e_ids > b)).astype(state.dtype)
         out.append(jnp.sum(state * m, axis=(-2, -1)))
     return jnp.stack(out, axis=-1)
+
+
+# =========================================================================
+# point-to-point boundary exchange (the distributed executor's collective)
+# =========================================================================
+def p2p_exchange(rows_w, local_src, send_slot, recv_slot, n_slots: int,
+                 axis_name: Optional[str] = None, fill=0.0):
+    """Ragged all-to-all over the worker axis — the boundary exchange.
+
+    Every receive-buffer entry (a halo vertex's state, or an owned edge's
+    ETR rank summary) lives with exactly ONE owner.  The partitioner's
+    routing tables split them into a local copy (entries the receiver owns
+    itself) and one ragged lane per worker pair carrying just the ghost
+    entries — so only ghost entries move, with no global [V]/[2E] buffer and
+    no psum reduction (ownership is exclusive: the exchange is a copy).
+
+      rows_w     [Wl, K, *TS]   owner-local source rows (this device's
+                                workers; Wl = W when simulated)
+      local_src  int32[Wl, N]   own-row slot per self-owned receive entry,
+                                pad = K (reads the ``fill`` row)
+      send_slot  int32[Wl, W, C] own-row slot of the k-th row local worker i
+                                sends to GLOBAL worker d, pad = K
+      recv_slot  int32[Wl, W, C] receive-buffer position where the k-th row
+                                from GLOBAL worker s lands, pad = N (a trash
+                                slot, sliced off)
+      n_slots    N              receive-buffer extent
+
+    With ``axis_name`` unset the worker axis is fully local (the vmap
+    simulation) and the all-to-all is an axis transpose; under shard_map the
+    same payload moves with one ``lax.all_to_all`` over the mesh axis.  Both
+    are pure data movement over identical tables, which is what makes the
+    sharded path bit-identical to the simulation.  Lanes are padded to C
+    (the max per-pair ghost count); the ragged content — Σ ghost entries —
+    is the real traffic reported by ``PartitionArrays.exchange_volume()`` /
+    ``etr_exchange_volume()``.
+    """
+    Wl, K = rows_w.shape[:2]
+    W, C = send_slot.shape[1:3]
+    ts = rows_w.shape[2:]
+    pad = jnp.full((Wl, 1) + ts, fill, rows_w.dtype)
+    rows_pad = jnp.concatenate([rows_w, pad], axis=1)
+    take = jax.vmap(lambda r, s: r[s])
+    local = take(rows_pad, local_src)                    # [Wl, N, *TS]
+    payload = take(rows_pad, send_slot)                  # [Wl, W, C, *TS]
+    if axis_name is None:
+        received = jnp.swapaxes(payload, 0, 1)           # [W_dst, W_src, C]
+    else:
+        D = W // Wl
+        q = payload.reshape((Wl, D, Wl, C) + ts)         # split dst by device
+        q = jnp.moveaxis(q, 1, 0)                        # [D, Wl_src, Wl_dst, C]
+        a = jax.lax.all_to_all(q, axis_name, 0, 0)       # [D_src, Wl_src, Wl_dst, C]
+        received = jnp.moveaxis(a, 2, 0).reshape((Wl, W, C) + ts)
+
+    def place(loc, rec, pos):
+        buf = jnp.concatenate(
+            [loc, jnp.full((1,) + ts, fill, rows_w.dtype)], axis=0)
+        return buf.at[pos.reshape(-1)].set(rec.reshape((-1,) + ts))[:n_slots]
+
+    return jax.vmap(place)(local, received, recv_slot)
 
 
 # =========================================================================

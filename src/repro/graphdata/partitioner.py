@@ -161,6 +161,32 @@ class PartitionArrays:
     to per-worker permutations because every arrival segment lives whole on
     one worker).  Only summaries for edges consumed by ANOTHER worker
     (``n_src_ghost``) cross partitions — O(cut edges), not O(frontier).
+
+    Point-to-point routing tables: the executor's exchange is a ragged
+    all-to-all (``superstep.p2p_exchange``) — each worker pair (s, d) has a
+    lane carrying exactly the entries d needs that s owns, so only ghost
+    entries move (no global [V]/[2E] scatter+psum buffer).  Two channels
+    share one table layout:
+
+      vertex-state channel (plain-hop state; the MIN/MAX extremum channel
+      rides the same tables with a ±inf fill):
+        halo_own_slot[d, h]     local own-slot of halo entry h when d owns it
+                                itself (local copy, no traffic), pad = Vmax
+        xchg_send_slot[s, d, k] own-slot of the k-th state row s sends to d,
+                                pad = Vmax; diagonal lanes are empty
+        xchg_recv_slot[d, s, k] halo slot where that row lands at d, pad = Hmax
+
+      ETR rank-summary channel:
+        etr_local_slot[d, j]    producer-row slot of owned edge j's summary
+                                when d produced it itself, pad = Smax
+        etr_send_slot[s, d, k]  producer-row slot of the k-th summary s sends
+                                to d, pad = Smax
+        etr_recv_slot[d, s, k]  owned-edge slot where it lands at d, pad = Emax
+
+    Lanes are padded to the max per-pair ghost count (``c_max`` /
+    ``etr_c_max``); the REAL traffic — what ``exchange_volume()`` /
+    ``etr_exchange_volume()`` report and θ_net is fitted on — is the ragged
+    content: Σ n_ghost and Σ n_src_ghost entries per superstep.
     """
 
     n_workers: int
@@ -185,6 +211,13 @@ class PartitionArrays:
     etr_src_len: np.ndarray       # int32[W, Smax] — source arrival-segment length, pad = 0
     n_src: np.ndarray             # int64[W] — summaries produced per worker
     n_src_ghost: np.ndarray       # int64[W] — summaries consumed by ANOTHER worker
+    # ---- point-to-point routing tables (see class docstring)
+    halo_own_slot: np.ndarray     # int32[W, Hmax] — pad = Vmax
+    xchg_send_slot: np.ndarray    # int32[W, W, Cmax] — pad = Vmax
+    xchg_recv_slot: np.ndarray    # int32[W, W, Cmax] — pad = Hmax
+    etr_local_slot: np.ndarray    # int32[W, Emax] — pad = Smax
+    etr_send_slot: np.ndarray     # int32[W, W, Cetr] — pad = Smax
+    etr_recv_slot: np.ndarray     # int32[W, W, Cetr] — pad = Emax
     stats: Dict
 
     @property
@@ -302,6 +335,63 @@ def build_partition_arrays(
     assert int(n_src.sum()) == n2e, "every edge's summary produced exactly once"
     s_max = max(1, int(n_src.max()))
 
+    # ---- point-to-point routing tables: one ragged lane per worker pair.
+    # Vertex-state channel: d's halo entries owned by s travel on lane (s, d)
+    # in d's halo order; entries d owns itself are a local copy
+    # (halo_own_slot).  Every halo entry is either local or on exactly one
+    # lane, so a padded all-to-all over the lanes moves only ghost entries.
+    halo_own_slot = np.full((W, h_max), v_max, np.int32)
+    send_lists: Dict[tuple, tuple] = {}
+    for d in range(W):
+        halo = halos[d]
+        hpos = np.arange(halo.shape[0], dtype=np.int64)
+        halo_owner = owner[halo]
+        self_sel = halo_owner == d
+        halo_own_slot[d, hpos[self_sel]] = local_of[halo[self_sel]]
+        for s in np.unique(halo_owner[~self_sel]):
+            sel = halo_owner == s
+            send_lists[(int(s), d)] = (local_of[halo[sel]], hpos[sel])
+    c_max = max(1, max((v[0].shape[0] for v in send_lists.values()), default=0))
+    xchg_send_slot = np.full((W, W, c_max), v_max, np.int32)
+    xchg_recv_slot = np.full((W, W, c_max), h_max, np.int32)
+    for (s, d), (slots, hpos) in send_lists.items():
+        xchg_send_slot[s, d, : slots.shape[0]] = slots
+        xchg_recv_slot[d, s, : hpos.shape[0]] = hpos
+    lane_ghost = np.asarray(
+        [sum(v[0].shape[0] for (s, d), v in send_lists.items() if d == w)
+         for w in range(W)], np.int64)
+    assert np.array_equal(lane_ghost, n_ghost), "p2p lanes must cover ghosts"
+
+    # ETR rank-summary channel: producer s's k-th produced summary goes to
+    # the owner of its edge; self-consumed summaries are a local copy.
+    etr_local_slot = np.full((W, e_max), s_max, np.int32)
+    etr_lists: Dict[tuple, tuple] = {}
+    for s in range(W):
+        produced = src_eids[s]
+        consumer = edge_owner[produced]
+        self_sel = consumer == s
+        # local copy: position of the self-consumed summaries in s's own
+        # edge row (edges are ascending, produced eids too → searchsorted)
+        etr_local_slot[s, np.searchsorted(edges[s], produced[self_sel])] = \
+            np.nonzero(self_sel)[0]
+        for d in np.unique(consumer[~self_sel]):
+            sel = consumer == d
+            etr_lists[(s, int(d))] = (
+                np.nonzero(sel)[0],
+                np.searchsorted(edges[int(d)], produced[sel]),
+            )
+    etr_c_max = max(1, max((v[0].shape[0] for v in etr_lists.values()),
+                           default=0))
+    etr_send_slot = np.full((W, W, etr_c_max), s_max, np.int32)
+    etr_recv_slot = np.full((W, W, etr_c_max), e_max, np.int32)
+    for (s, d), (slots, epos) in etr_lists.items():
+        etr_send_slot[s, d, : slots.shape[0]] = slots
+        etr_recv_slot[d, s, : epos.shape[0]] = epos
+    lane_etr = np.asarray(
+        [sum(v[0].shape[0] for (s, d), v in etr_lists.items() if s == w)
+         for w in range(W)], np.int64)
+    assert np.array_equal(lane_etr, n_src_ghost), "ETR lanes must cover ghosts"
+
     arrays = PartitionArrays(
         n_workers=W,
         own_ids=_pad(owned, v_max, V),
@@ -321,6 +411,12 @@ def build_partition_arrays(
         etr_src_len=_pad(src_lens, s_max, 0),
         n_src=n_src,
         n_src_ghost=n_src_ghost,
+        halo_own_slot=halo_own_slot,
+        xchg_send_slot=xchg_send_slot,
+        xchg_recv_slot=xchg_recv_slot,
+        etr_local_slot=etr_local_slot,
+        etr_send_slot=etr_send_slot,
+        etr_recv_slot=etr_recv_slot,
         stats=dict(
             **part.stats,
             n_workers=W,
@@ -328,6 +424,8 @@ def build_partition_arrays(
             ghost_frac=float(n_ghost.sum() / max(n_halo.sum(), 1)),
             exchange_volume=int(n_ghost.sum()),
             etr_exchange_volume=int(n_src_ghost.sum()),
+            p2p_lane_width=int(c_max),
+            p2p_etr_lane_width=int(etr_c_max),
         ),
     )
     return arrays

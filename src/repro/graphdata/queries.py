@@ -263,6 +263,21 @@ _BUILDERS: Dict[str, Callable] = {
 }
 
 
+def to_minmax(inst: QueryInstance, graph, op: int = Q.AGG_MIN) -> QueryInstance:
+    """MIN/MAX variant of a plain instance, aggregating the post ``length``
+    property — the ONE construction the fit population
+    (benchmarks/fit_cost_model), the serving bench's extremum leg
+    (benchmarks/serving) and the multidevice conformance tests share, so the
+    query whose extremum-channel traffic is fitted is the same one that is
+    benchmarked and gated."""
+    b = graph.meta["builder"]
+    tag = "min" if op == Q.AGG_MIN else "max"
+    return dataclasses.replace(
+        inst, template=f"{inst.template}-{tag}",
+        qry=dataclasses.replace(inst.qry, agg_op=op,
+                                agg_key=b.key_ids["length"]))
+
+
 def make_workload(
     graph,
     templates: Sequence[str] = TEMPLATES,

@@ -18,3 +18,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over actually-present devices (tests / CPU benches)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_worker_mesh(n_devices: int):
+    """1-D ``workers`` mesh for the partitioned query engine: the partition
+    worker axis is sharded over the first ``n_devices`` devices (forced-host
+    CPU devices in tests/CI via --xla_force_host_platform_device_count, real
+    chips in deployment).  The device order fixes the worker→device map, so
+    the partitioner's point-to-point lane tables stay valid per process."""
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:n_devices]),
+                             ("workers",))

@@ -3,15 +3,17 @@
 Master receives path queries, rewrites values to dictionary ids, asks the
 cost-model planner for the split point, executes on the in-memory graph, and
 returns counts/aggregates — with per-query latency accounting and an
-execution budget (the paper's 600 s budget, scaled).  Batched requests share
-compiled executables (query-shape keyed jit cache in the engine).
+execution budget (the paper's 600 s budget, scaled).  Throughput serving
+goes through the batch-scheduler runtime (``run_workload_scheduled`` /
+``repro.serving``); the legacy ``run_workload_batched`` per-server batching
+mode is gone — the scheduler supersedes it with zero per-query fallbacks.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -91,47 +93,6 @@ class GraniteServer:
             if verbose:
                 print(f"{rec.template} split={rec.split} count={rec.count:.0f} "
                       f"{rec.latency_ms:.1f}ms")
-        return out
-
-    def run_workload_batched(self, workload: List[QueryInstance]
-                             ) -> List[QueryResultRecord]:
-        """LEGACY throughput mode, superseded by the serving runtime
-        (``repro.serving.BatchScheduler`` — use ``run_workload_scheduled``).
-        Kept behind a regression test until removal.  Aggregates and
-        non-sliceable queries still fall back to per-query execution here;
-        the scheduler has no such fallback.
-
-        Group planning uses the batch-aware estimate (``choose_batch``): the
-        old code planned from ``insts[0]`` only and applied that split to the
-        whole group even when instances' predicate selectivities differed."""
-        from ..core.engine import execute_batch
-        from ..core import engine_sliced as ES
-
-        groups: Dict[tuple, List[int]] = {}
-        for i, inst in enumerate(workload):
-            groups.setdefault(inst.qry.shape_key(), []).append(i)
-        out: List[Optional[QueryResultRecord]] = [None] * len(workload)
-        for key, idxs in groups.items():
-            insts = [workload[i] for i in idxs]
-            qs = [x.qry for x in insts]
-            split = (self.planner.choose_batch(qs).split if self.use_planner
-                     else self.plan(insts[0]))
-            mode = self._mode_for(insts[0])
-            if insts[0].qry.agg_op != -1 or not ES.sliceable(insts[0].qry):
-                for i in idxs:          # fall back to per-query execution
-                    out[i] = self.execute(workload[i], split=split)
-                continue
-            execute_batch(self.graph, qs, split=split,
-                          mode=mode, n_buckets=self.n_buckets)   # compile
-            t0 = time.perf_counter()
-            totals = execute_batch(self.graph, qs,
-                                   split=split, mode=mode,
-                                   n_buckets=self.n_buckets)
-            dt = (time.perf_counter() - t0) * 1e3 / len(idxs)
-            for j, i in enumerate(idxs):
-                cnt = float(np.sum(totals[j]))
-                out[i] = QueryResultRecord(insts[j].template, split, True,
-                                           cnt, dt, dt <= self.budget_s * 1e3)
         return out
 
     def run_workload_scheduled(self, workload: List[QueryInstance],

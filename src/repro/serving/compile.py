@@ -18,6 +18,11 @@ short warm phase the compiled-executable cache (cache.py) absorbs every
 dispatch.  Pad slots repeat the first instance's parameters (any valid row
 works: batch elements are independent under vmap) and are sliced off the
 outputs by the scheduler.
+
+The same tensor feeds the shard_map-native partitioned path unchanged: the
+batch axis is vmapped INSIDE the shard_map body (params replicated across
+the worker mesh), so padding needs no device-count awareness — only the
+executable-cache key does (scheduler.py adds the resolved device count).
 """
 from __future__ import annotations
 

@@ -12,13 +12,23 @@ moves:
   dispatch  ONE vmapped engine call per group through the compiled-executable
             cache.  Aggregates (COUNT/MIN/MAX) and the partitioned engine
             batch exactly like plain counts — there is no per-query fallback
-            path in this runtime, which is the point (the legacy
-            ``GraniteServer.run_workload_batched`` fell back for both).
+            path in this runtime, which is the point (the legacy — since
+            removed — ``GraniteServer.run_workload_batched`` fell back for
+            both).
 
 Engines: ``dense`` / ``sliced`` (engine.batch_executable), ``partitioned``
-(engine_partitioned.batch_executable, vmap-simulated worker axis), or
-``auto`` (sliced when the query qualifies, dense otherwise — resolved at
-admission so the group key is concrete).
+(engine_partitioned.batch_executable), or ``auto`` (sliced when the query
+qualifies, dense otherwise — resolved at admission so the group key is
+concrete).
+
+The partitioned engine's dispatch is shard_map-native: when >1 JAX devices
+exist and divide ``n_workers`` (CI forces this with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``), the group's
+query-batch axis is vmapped INSIDE the shard_map body, so ONE dispatch runs
+(batch × workers) on the device mesh with the point-to-point boundary
+exchange between supersteps; with one device the worker axis runs in the
+bit-identical vmap simulation.  ``use_shard_map=False`` forces the
+simulation; the resolved device count is part of the executable-cache key.
 """
 from __future__ import annotations
 
@@ -86,6 +96,7 @@ class BatchScheduler:
         plan_cache: Optional[PlanCache] = None,
         exec_cache: Optional[ExecutableCache] = None,
         pad_batches: bool = True,
+        use_shard_map: Optional[bool] = None,
     ):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}")
@@ -93,6 +104,10 @@ class BatchScheduler:
         self.engine = engine
         self.n_buckets = n_buckets
         self.n_workers = n_workers
+        self.use_shard_map = use_shard_map
+        # resolved once: device count is fixed per process, and the resolved
+        # value keys the executable cache (sharded ≠ simulated executables)
+        self.n_devices = EP.resolve_n_devices(use_shard_map, n_workers)
         self.use_planner = use_planner
         self.budget_s = budget_s
         self.keep_outputs = keep_outputs
@@ -165,7 +180,8 @@ class BatchScheduler:
                           engine: str):
         if engine == "partitioned":
             return EP.batch_executable(self.graph, qry, split, mode,
-                                       self.n_buckets, self.n_workers)
+                                       self.n_buckets, self.n_workers,
+                                       use_shard_map=self.use_shard_map)
         return E.batch_executable(self.graph, qry, split, mode,
                                   self.n_buckets,
                                   sliced=(engine == "sliced"))
@@ -198,6 +214,7 @@ class BatchScheduler:
                 ekey = (engine, self.fingerprint, bucket, split, mode,
                         self.n_buckets,
                         self.n_workers if engine == "partitioned" else 0,
+                        self.n_devices if engine == "partitioned" else 0,
                         pt.params.shape[0])
                 exec_cached = ekey in self.exec_cache
                 run = self.exec_cache.get_or_build(

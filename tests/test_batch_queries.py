@@ -45,15 +45,19 @@ def test_batch_throughput_wins(medium_static_graph):
     assert t_batch < t_seq, (t_batch, t_seq)
 
 
-def test_server_batched_mode(medium_static_graph):
+def test_server_scheduled_mode(medium_static_graph):
+    """The server's throughput entrypoint is the batch-scheduler runtime
+    (the legacy run_workload_batched per-server mode is gone): results in
+    submission order, equal to the sequential loop."""
     from repro.launch.query import GraniteServer
     from repro.graphdata.queries import make_workload
 
     server = GraniteServer(medium_static_graph, use_planner=True)
+    assert not hasattr(server, "run_workload_batched")
     wl = make_workload(medium_static_graph, templates=("Q2", "Q4"),
                        n_per_template=6, seed=44)
     seq = server.run_workload(wl)
-    bat = server.run_workload_batched(wl)
+    bat = server.run_workload_scheduled(wl)
     for a, b in zip(seq, bat):
         assert a.count == b.count, (a.template, a.count, b.count)
     assert all(r.ok for r in bat)

@@ -8,6 +8,10 @@ from repro.core import engine as E
 from repro.core import query as Q
 from repro.core.ref_engine import RefEngine
 
+# tier-1 runs this file at smoke scale; scripts/ci.sh re-selects it BY
+# MARKER (`-m conformance`) with CONFORMANCE_SCALE=ci for the full sweep
+pytestmark = pytest.mark.conformance
+
 # Parametrization must be collection-time static: list the names the matrix
 # generates (the ci-only ETR sweep is appended when the env says so).
 _SMOKE_NAMES = [

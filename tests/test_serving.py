@@ -150,12 +150,12 @@ def test_planner_choose_batch_costs_whole_batch(medium_static_graph):
         planner.choose_batch([qs[0], wl2[0].qry])
 
 
-def test_server_batched_group_planning_regression(medium_static_graph,
-                                                  monkeypatch):
-    """Regression for the run_workload_batched planning bug: the group split
-    must come from the batch-aware planner over ALL group instances, not
-    from insts[0] alone.  (Legacy path — pinned until the scheduler replaces
-    it outright.)"""
+def test_scheduler_group_planning_regression(medium_static_graph,
+                                             monkeypatch):
+    """Regression for the (removed) run_workload_batched planning bug, now
+    pinned on its replacement: the scheduler's group split must come from
+    the batch-aware planner over ALL group instances, not from the first
+    instance alone."""
     from repro.launch.query import GraniteServer
     server = GraniteServer(medium_static_graph, use_planner=True)
     wl = make_workload(medium_static_graph, templates=("Q2", "Q4"),
@@ -168,7 +168,7 @@ def test_server_batched_group_planning_regression(medium_static_graph,
         return orig(self, queries)
 
     monkeypatch.setattr(Planner, "choose_batch", spy)
-    bat = server.run_workload_batched(wl)
+    bat = server.run_workload_scheduled(wl, warm=False)
     assert seen == [4, 4]                  # whole group, once per bucket
     seq = server.run_workload(wl)
     for a, b in zip(seq, bat):
