@@ -5,9 +5,13 @@
 #   ./scripts/ci.sh --fast     # tier-1 only (every-push leg)
 #
 # Heavy legs (full gate only):
+#   kernels      the kernel-layer equivalence leg (`-m kernels`): fused hop
+#                kernel vs the XLA hop across modes × aggregates, layout
+#                property tests
 #   conformance  the four-way differential matrix at CONFORMANCE_SCALE=ci
-#                (full worker sweep + all ETR operators), selected with
-#                `-m conformance` — tier-1 already runs it at smoke scale
+#                (full worker sweep + all ETR operators + the pallas impl
+#                axis), selected with `-m conformance` — tier-1 already runs
+#                it at smoke scale
 #   multidevice  shard_map-native batched serving on 8 forced host devices
 #                (XLA_FLAGS), bit-identity vs the vmap simulation
 #   smokes       engine-vs-oracle and workload/scheduler sweeps
@@ -25,6 +29,8 @@ echo "== tier-1: pytest (markers 'slow'/'multidevice' deselected by pytest.ini) 
 python -m pytest -x -q
 
 if [[ "${1:-}" != "--fast" ]]; then
+  echo "== kernels: fused hop kernel vs XLA hop equivalence (-m kernels) =="
+  python -m pytest -m kernels -x -q
   echo "== conformance: four-way differential matrix at CI scale (-m conformance) =="
   CONFORMANCE_SCALE=ci python -m pytest -m conformance -x -q
   echo "== multidevice: shard_map serving vs vmap simulation on 8 forced devices =="

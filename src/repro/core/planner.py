@@ -68,7 +68,26 @@ DEFAULT_COEFFS = {
     "theta_net": 8.0e-5,  # ms per boundary vertex-state entry (plain/extremum
                           # channels of the point-to-point exchange)
     "theta_net_etr": 8.0e-5,  # ms per boundary ETR rank summary (cut edges)
+    # per-impl hop-DELIVERY slope (ms per traversal edge in the hop slice):
+    # the measured cost of the gather → mask → segment-reduce step under
+    # each lowering (benchmarks/fit_cost_model fits both from hop-delivery
+    # micro-benches).  The estimate applies the DELTA from the xla slope, so
+    # impl='xla' plans cost exactly what the historical model says (theta_e
+    # already folds the xla delivery in) and the impl sweep discriminates on
+    # the fitted difference alone.  Defaults are 0 → tie → xla.
+    "theta_scatter_xla": 0.0,
+    "theta_scatter_pallas": 0.0,
 }
+
+#: the impl axis plan selection sweeps when asked to choose a lowering
+HOP_IMPL_CHOICES = ("xla", "pallas")
+
+
+def _scatter_delta(coeffs: dict, impl: str) -> float:
+    """Per-edge delivery-cost delta of ``impl`` vs the xla baseline."""
+    base = "pallas" if impl in ("pallas", "pallas_interpret") else "xla"
+    return (float(coeffs.get(f"theta_scatter_{base}", 0.0))
+            - float(coeffs.get("theta_scatter_xla", 0.0)))
 
 _COEFF_PATH = os.path.join(os.path.dirname(__file__), "..", "configs", "cost_coeffs.json")
 
@@ -109,6 +128,7 @@ class PlanEstimate:
     split: int
     t_ms: float
     steps: List[StepEstimate]
+    impl: str = "xla"   # hop-delivery lowering the estimate was costed at
 
 
 def _clause_freq(stats: GraphStats, clauses: Sequence[Q.Clause], ent_type: int,
@@ -153,13 +173,16 @@ def estimate_segment(
     exchange_volume: float = 0.0,
     etr_exchange_volume: float = 0.0,
     extremum_channel: bool = False,
+    impl: str = "xla",
 ) -> List[StepEstimate]:
     """Per-superstep estimates.  With ``n_workers > 1`` compute extents are
     divided over workers (balanced partitions) and each hop pays the θ_net
     exchange term: ``exchange_volume`` (halo ghost entries; doubled when the
     MIN/MAX ``extremum_channel`` rides along) on plain hops,
     ``etr_exchange_volume`` (boundary rank summaries — cut edges) on ETR
-    hops."""
+    hops.  ``impl`` selects the hop-delivery lowering being costed: each hop
+    pays the fitted θ_scatter slope DELTA vs the xla baseline (zero for
+    impl='xla', so the historical model is unchanged)."""
     steps: List[StepEstimate] = []
     prev_m_e = None
     w = max(1, int(n_workers))
@@ -213,6 +236,12 @@ def estimate_segment(
             coeffs["theta0"]
             + ((coeffs["theta_init"] if i == 0 else coeffs["theta_v"]) * V_sigma
                + coeffs["theta_e"] * e_slice
+               # fused-hop saving applies to plain hops only: ETR hops
+               # materialise per-edge counts by construction and only swap
+               # the delivery step, which the fitted full-hop slope would
+               # over-credit
+               + (_scatter_delta(coeffs, impl) * e_slice
+                  if ep.etr_op == -1 else 0.0)
                + (coeffs["theta_etr"] * e_slice if ep.etr_op != -1 else 0.0)
                + coeffs["theta_m"] * max(m_e, 0.0)) / w
             + theta_net * m_net
@@ -256,7 +285,8 @@ class Planner:
             return [0]
         return list(range(qry.n_vertices))
 
-    def estimate(self, qry: Q.PathQuery, split: int) -> PlanEstimate:
+    def estimate(self, qry: Q.PathQuery, split: int,
+                 impl: str = "xla") -> PlanEstimate:
         n = qry.n_vertices
         steps: List[StepEstimate] = []
         # MIN/MAX aggregates thread the extremum channel through the (right,
@@ -269,6 +299,7 @@ class Planner:
                 n_workers=self.n_workers,
                 exchange_volume=self.exchange_volume,
                 etr_exchange_volume=self.etr_exchange_volume,
+                impl=impl,
             )
         if (n - 1) - split > 0:
             rev = qry.reversed()
@@ -280,21 +311,29 @@ class Planner:
                 exchange_volume=self.exchange_volume,
                 etr_exchange_volume=self.etr_exchange_volume,
                 extremum_channel=extremum,
+                impl=impl,
             )
         t = sum(s.t_ms for s in steps)
-        return PlanEstimate(split, t, steps)
+        return PlanEstimate(split, t, steps, impl)
 
-    def choose(self, qry: Q.PathQuery) -> PlanEstimate:
+    def choose(self, qry: Q.PathQuery,
+               impls: Sequence[str] = ("xla",)) -> PlanEstimate:
+        """Best (split, impl) over the plan space.  The default sweeps only
+        the xla lowering (the historical behaviour); pass
+        ``impls=HOP_IMPL_CHOICES`` to let the fitted per-impl θ_scatter term
+        route hops onto the fused kernel where it wins — ties break toward
+        the first entry (xla)."""
         best = None
         for split in self.enumerate_plans(qry):
-            est = self.estimate(qry, split)
-            if best is None or est.t_ms < best.t_ms:
-                best = est
+            for impl in impls:
+                est = self.estimate(qry, split, impl)
+                if best is None or est.t_ms < best.t_ms:
+                    best = est
         return best
 
     # ------------------------------------------------------- batched serving
-    def estimate_batch(self, queries: Sequence[Q.PathQuery],
-                       split: int) -> PlanEstimate:
+    def estimate_batch(self, queries: Sequence[Q.PathQuery], split: int,
+                       impl: str = "xla") -> PlanEstimate:
         """Cost a whole same-shape batch at one split point.
 
         Instances share the traced structure but not their parameter values,
@@ -304,16 +343,21 @@ class Planner:
         instance's (for introspection); ``t_ms`` covers the batch.
         """
         assert queries, "empty batch"
-        ests = [self.estimate(q, split) for q in queries]
-        return PlanEstimate(split, sum(e.t_ms for e in ests), ests[0].steps)
+        ests = [self.estimate(q, split, impl) for q in queries]
+        return PlanEstimate(split, sum(e.t_ms for e in ests), ests[0].steps,
+                            impl)
 
-    def choose_batch(self, queries: Sequence[Q.PathQuery]) -> PlanEstimate:
-        """One split for a same-shape batch, minimising whole-batch cost.
+    def choose_batch(self, queries: Sequence[Q.PathQuery],
+                     impls: Sequence[str] = ("xla",)) -> PlanEstimate:
+        """One (split, impl) for a same-shape batch, minimising whole-batch
+        cost.
 
         This is the planner the batch scheduler uses: a vmapped group runs
         every instance at ONE split, so the right objective is the batch sum
         — picking the first instance's best split can lose when selectivities
-        differ across instances (the old run_workload_batched bug)."""
+        differ across instances (the old run_workload_batched bug).  The
+        ``impls`` sweep mirrors ``choose()``: a group is dispatched on one
+        hop-delivery lowering, so the impl is chosen batch-wide too."""
         assert queries, "empty batch"
         shape0 = queries[0].shape_key()
         for q in queries[1:]:
@@ -321,9 +365,10 @@ class Planner:
                 raise ValueError("batch planning needs same-shape queries")
         best = None
         for split in self.enumerate_plans(queries[0]):
-            est = self.estimate_batch(queries, split)
-            if best is None or est.t_ms < best.t_ms:
-                best = est
+            for impl in impls:
+                est = self.estimate_batch(queries, split, impl)
+                if best is None or est.t_ms < best.t_ms:
+                    best = est
         return best
 
 

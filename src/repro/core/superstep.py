@@ -30,6 +30,12 @@ all three:
                                                    exchange, all channels)
   delivery               deliver()               — sorted segment-sum of
                                                    per-edge counts by arrival
+                         fused_hop_deliver()     — the fused kernel hop
+                                                   (gather → temporal mask →
+                                                   segment-reduce in VMEM via
+                                                   kernels.hop_scatter; the
+                                                   impl='pallas' hot path of
+                                                   every plain hop)
   extremum channel       minmax_seed(), minmax_edge(), deliver_extremum()
                          — the MIN/MAX aggregate's per-hop DP channel
                            (segment_min/segment_max delivery; the partitioned
@@ -59,7 +65,7 @@ helpers stay signature-stable).
 from __future__ import annotations
 
 import contextlib
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +73,8 @@ import numpy as np
 
 from . import intervals as iv
 from . import query as Q
+from ..kernels import hop_scatter as HK
+from ..kernels.common import check_impl, resolve_interpret, use_pallas
 
 MODE_STATIC = 0
 MODE_BUCKET = 1
@@ -417,15 +425,113 @@ def p2p_exchange(rows_w, local_src, send_slot, recv_slot, n_slots: int,
 # =========================================================================
 # delivery
 # =========================================================================
-def deliver(cnt_e, seg_ids, num_segments: int, indices_are_sorted: bool = True):
+def deliver(cnt_e, seg_ids, num_segments: int, indices_are_sorted: bool = True,
+            impl: str = "xla", layout=None):
     """Sorted segment-sum of per-edge counts by arrival vertex — the message
     delivery of one superstep.  Summation order is the canonical (arrival-
     sorted) edge order, which is what makes the partitioned executor's
-    per-worker deliveries bit-identical to the dense one."""
-    return jax.ops.segment_sum(
-        cnt_e, seg_ids, num_segments=num_segments,
-        indices_are_sorted=indices_are_sorted,
-    )
+    per-worker deliveries bit-identical to the dense one.
+
+    ``impl`` selects the lowering: ``'xla'`` is the segment-sum scatter;
+    ``'pallas'``/``'pallas_interpret'`` with a ``kernels.hop_scatter``
+    ``HopLayout`` over the same (static, sorted) seg_ids runs the blocked
+    scatter-as-matmul kernel instead — identical sums (bit-identical while
+    counts are exact integers in float32, the engine's invariant)."""
+    if not use_pallas(check_impl(impl)) or layout is None:
+        return jax.ops.segment_sum(
+            cnt_e, seg_ids, num_segments=num_segments,
+            indices_are_sorted=indices_are_sorted,
+        )
+    return HK.scatter_deliver(cnt_e, layout.tables, num_segments,
+                              layout.block_v, impl=impl)
+
+
+def fused_hop_deliver(
+    state,                       # [N, *TS] source-state table
+    src_slot,                    # int32[E] — source row per edge; N = zero row
+    wmask,                       # bool[E] edge-predicate ∧ direction match
+    evalid,                      # temporal validity: None / bool[E, B] /
+                                 # int32[E, 2] interval (per mode)
+    mode: int,
+    lt: Dict,                    # HopLayout.tables (or a worker-sliced row of
+                                 #   stacked tables — a uniform array pytree,
+                                 #   so executors can vmap it with in_axes=0)
+    block_v: int,
+    num_segments: int,
+    impl: str = "pallas",
+    mch=None,                    # optional extremum channel table [N]
+    minmax_op: int = Q.AGG_MIN,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """One fused traversal hop: gather → temporal mask → segment-reduce.
+
+    Pallas-only twin of the three-step XLA hop (``state[src]`` gather,
+    ``apply_edge``, ``deliver``) that never materialises the per-edge
+    ``[E, *TS]`` state: the ``kernels.hop_scatter`` kernel gathers, weights
+    and prefix-reduces per destination block in VMEM.  When ``mch`` is
+    given, the MIN/MAX extremum channel is gathered, liveness-gated by the
+    in-VMEM contributions, and min/max-reduced alongside (the
+    ``minmax_edge`` + ``deliver_extremum`` pair of the XLA path).
+
+    ``evalid``/``mch`` may be 0-d placeholders for "absent" (the profiling
+    and vmap call sites can't pass None through mapped axes).
+
+    Returns (arrivals [num_segments, *TS], mch_out [num_segments] | None).
+    """
+    assert use_pallas(check_impl(impl)), "fused_hop_deliver is the kernel path"
+    interpret = resolve_interpret(None, impl)
+    if evalid is not None and getattr(evalid, "ndim", 1) == 0:
+        evalid = None
+    if mch is not None and getattr(mch, "ndim", 1) == 0:
+        mch = None
+    N = state.shape[0]
+    ts = state.shape[1:]
+    gather_idx, valid = lt["gather"], lt["valid"]
+    n_blocks, block_e = lt["ldst"].shape
+    src_sl = HK.slots(src_slot.astype(jnp.int32), gather_idx, valid,
+                      N).reshape(n_blocks, block_e)
+    mch_p = None
+    neutral = 0.0
+    op_is_min = minmax_op == Q.AGG_MIN
+    if mch is not None:
+        neutral = float(np.inf if op_is_min else -np.inf)
+        mch_p = jnp.concatenate(
+            [mch.astype(jnp.float32), jnp.full((1,), neutral, jnp.float32)]
+        )[:, None]
+    if mode == MODE_INTERVAL:
+        B = state.shape[-2]
+        state_p = jnp.concatenate(
+            [state.reshape(N, B * (B + 1)),
+             jnp.zeros((1, B * (B + 1)), state.dtype)], axis=0)
+        w = HK.slots(wmask.astype(jnp.float32), gather_idx, valid,
+                     0.0).reshape(n_blocks, block_e)
+        sb, eb = _interval_to_cells(evalid, B)
+        sb_sl = HK.slots(sb.astype(jnp.int32), gather_idx, valid,
+                         0).reshape(n_blocks, block_e)
+        eb_sl = HK.slots(eb.astype(jnp.int32), gather_idx, valid,
+                         0).reshape(n_blocks, block_e)
+        out, mch_out = HK.fused_hop_interval_pallas(
+            state_p, src_sl, w, sb_sl, eb_sl, lt["sstart"], lt["send"],
+            lt["ldst"], block_v, B, interpret=interpret, mch_p=mch_p,
+            neutral=neutral, op_is_min=op_is_min)
+        arrivals = out[:num_segments].reshape(num_segments, B, B + 1)
+    else:
+        C = 1 if mode == MODE_STATIC else state.shape[1]
+        state_p = jnp.concatenate(
+            [state.reshape(N, C), jnp.zeros((1, C), state.dtype)], axis=0)
+        if mode == MODE_STATIC:
+            wv = wmask.astype(jnp.float32)[:, None]
+        else:
+            wv = (wmask[:, None] & evalid).astype(jnp.float32)
+        w_cols = HK.slots(wv, gather_idx, valid, 0.0).reshape(
+            n_blocks, block_e, C)
+        out, mch_out = HK.fused_hop_cols_pallas(
+            state_p, src_sl, w_cols, lt["sstart"], lt["send"], lt["ldst"],
+            block_v, interpret=interpret, mch_p=mch_p, neutral=neutral,
+            op_is_min=op_is_min)
+        arrivals = out[:num_segments].reshape((num_segments,) + ts)
+    if mch_out is not None:
+        mch_out = mch_out[:num_segments]
+    return arrivals, mch_out
 
 
 # =========================================================================
@@ -451,14 +557,23 @@ def minmax_edge(mch_src, cnt_e, op: int, mode: int):
 
 
 def deliver_extremum(m_e, seg_ids, num_segments: int, op: int,
-                     indices_are_sorted: bool = True):
+                     indices_are_sorted: bool = True, impl: str = "xla",
+                     layout=None):
     """Extremum twin of ``deliver``: sorted segment_min/segment_max of the
     per-edge channel by arrival vertex.  Min/max is order-independent, so
     per-worker deliveries over owned segments match the dense delivery
-    exactly."""
-    seg = jax.ops.segment_min if op == Q.AGG_MIN else jax.ops.segment_max
-    return seg(m_e, seg_ids, num_segments=num_segments,
-               indices_are_sorted=indices_are_sorted)
+    exactly.  The ``impl`` axis mirrors ``deliver``'s: with a layout, the
+    blocked masked-extremum kernel replaces the XLA segment reduce (same
+    ±inf identity on empty segments)."""
+    if not use_pallas(check_impl(impl)) or layout is None:
+        seg = jax.ops.segment_min if op == Q.AGG_MIN else jax.ops.segment_max
+        return seg(m_e, seg_ids, num_segments=num_segments,
+                   indices_are_sorted=indices_are_sorted)
+    # m_e is already liveness-gated by minmax_edge, so every slot is "alive"
+    return HK.scatter_extremum(
+        m_e, jnp.ones_like(m_e), layout.tables, num_segments, layout.block_v,
+        neutral=float(minmax_neutral(op)), op_is_min=(op == Q.AGG_MIN),
+        impl=impl)
 
 
 # =========================================================================

@@ -2,19 +2,27 @@
 
 Each kernel package provides:
   <name>.py — the pl.pallas_call with explicit BlockSpec VMEM tiling
-  ops.py    — the jit'd public wrapper (padding, GQA mapping, interpret flag)
+  ops.py    — the jit'd public wrapper (padding, GQA mapping, impl selection)
   ref.py    — the pure-jnp oracle used by the test sweeps
 
-Kernels are TPU-targeted and validated with ``interpret=True`` on CPU (this
-container has no TPU).  Models select kernels via ``impl='pallas'|'xla'``;
-the dry-run compiles the XLA path (Pallas does not lower on the CPU backend).
+Implementation selection is uniform across packages (``common.py``):
+``impl='xla' | 'pallas' | 'pallas_interpret'`` plus an ``interpret`` flag
+that defaults to AUTO — interpreter mode only when the backend is CPU, so a
+GPU/TPU run can never silently execute a kernel in interpreter mode.
 
 Hot-spots covered:
-  bucket_scatter  — scatter-as-matmul segment reduction (engine superstep
-                    message delivery; GNN aggregation)
+  hop_scatter     — FUSED traversal-hop delivery: gather source state →
+                    temporal mask (static/bucket/interval cells) →
+                    segment-reduce (sum or min/max) per destination block,
+                    with no materialised per-edge state (the engine's query
+                    hot path; see core/superstep.fused_hop_deliver)
+  bucket_scatter  — scatter-as-matmul segment reduction (the delivery-only
+                    building block hop_scatter extends; GNN aggregation)
   interval_warp   — fused TimeWarp bucket alignment (engine temporal modes)
   flash_attention — blocked online-softmax GQA attention w/ causal + sliding
                     window (LM train/prefill)
   embedding_bag   — fused gather + segment-reduce over huge tables (DLRM)
 """
-from . import bucket_scatter, embedding_bag, flash_attention, interval_warp  # noqa: F401
+from . import (bucket_scatter, embedding_bag, flash_attention,  # noqa: F401
+               hop_scatter, interval_warp)
+from .common import IMPLS, resolve_interpret, use_pallas  # noqa: F401

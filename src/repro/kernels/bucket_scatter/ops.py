@@ -7,6 +7,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from ..common import resolve_interpret, use_pallas
 from .bucket_scatter import bucket_scatter_pallas
 from .ref import bucket_scatter_ref
 
@@ -24,12 +25,21 @@ class ScatterLayout:
 
 
 def build_layout(seg_ids: np.ndarray, num_segments: int,
-                 block_v: int = 256, block_e_mult: int = 256) -> ScatterLayout:
+                 block_v: int = 256, block_e_mult: int = 256,
+                 block_e: Optional[int] = None) -> ScatterLayout:
+    """Sorted-CSR block layout: destinations tile into blocks of ``block_v``,
+    each block's edge range pads to ``block_e`` slots (derived from the
+    fullest block unless forced — forcing lets callers share one slot shape
+    across several layouts, e.g. the per-worker shards of a partition)."""
     seg_ids = np.asarray(seg_ids)
     assert (np.diff(seg_ids) >= 0).all(), "seg_ids must be sorted"
     n_blocks = -(-num_segments // block_v)
     counts = np.bincount(seg_ids // block_v, minlength=n_blocks)
-    block_e = max(block_e_mult, int(-(-counts.max(initial=1) // block_e_mult) * block_e_mult))
+    need = int(-(-counts.max(initial=1) // block_e_mult) * block_e_mult)
+    if block_e is None:
+        block_e = max(block_e_mult, need)
+    else:
+        assert block_e >= counts.max(initial=0), "forced block_e too small"
     starts = np.zeros(n_blocks + 1, np.int64)
     np.cumsum(counts, out=starts[1:])
     gather = np.zeros((n_blocks, block_e), np.int64)
@@ -50,14 +60,15 @@ def bucket_scatter(
     num_segments: int,
     layout: Optional[ScatterLayout] = None,
     impl: str = "xla",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Segment-sum of contributions; layout enables the pallas path."""
-    if impl == "xla" or layout is None:
+    if not use_pallas(impl) or layout is None:
         return bucket_scatter_ref(contrib, seg_ids, num_segments)
     cp = contrib[jnp.asarray(layout.gather_idx)]
     cp = cp * jnp.asarray(layout.valid, contrib.dtype)[:, None]
     cp = cp.reshape(layout.n_blocks, layout.block_e, contrib.shape[1])
     out = bucket_scatter_pallas(cp, jnp.asarray(layout.local_dst),
-                                layout.block_v, interpret=interpret)
+                                layout.block_v,
+                                interpret=resolve_interpret(interpret, impl))
     return out[: num_segments]

@@ -1,0 +1,40 @@
+"""Shared implementation-selection helpers for the kernel wrappers.
+
+Every kernel package exposes the same idiom (set by flash_attention):
+
+  impl       'xla' (reference path) | 'pallas' | 'pallas_interpret'
+  interpret  None  → auto: interpreter mode ONLY when the backend is CPU
+                     (Pallas has no compiled CPU path), so a GPU/TPU run can
+                     never silently execute a kernel in interpreter mode;
+             bool  → explicit override (tests pin True for determinism).
+
+``impl='pallas_interpret'`` always forces the interpreter regardless of the
+``interpret`` argument — it exists so a caller can demand the portable path
+explicitly (debugging, differential tests on accelerators).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+IMPLS = ("xla", "pallas", "pallas_interpret")
+
+
+def check_impl(impl: str) -> str:
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    return impl
+
+
+def use_pallas(impl: str) -> bool:
+    return check_impl(impl) != "xla"
+
+
+def resolve_interpret(interpret: Optional[bool], impl: str = "pallas") -> bool:
+    """Resolve the effective interpreter flag for a pallas call."""
+    if impl == "pallas_interpret":
+        return True
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)

@@ -1,21 +1,24 @@
 """Wrapper: padding + implementation selection."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
+from ..common import resolve_interpret, use_pallas
 from .embedding_bag import embedding_bag_pallas
 from .ref import embedding_bag_ref
 
 
 def embedding_bag(table, indices, mode: str = "sum", impl: str = "xla",
-                  block_b: int = 128, interpret: bool = True):
+                  block_b: int = 128, interpret: Optional[bool] = None):
     """EmbeddingBag over a [V, D] table with [B, L] (-1 padded) indices."""
-    if impl == "xla":
+    if not use_pallas(impl):
         return embedding_bag_ref(table, indices, mode)
     B = indices.shape[0]
     pad = (-B) % block_b
     if pad:
         indices = jnp.pad(indices, ((0, pad), (0, 0)), constant_values=-1)
     out = embedding_bag_pallas(table, indices, mode=mode, block_b=block_b,
-                               interpret=interpret)
+                               interpret=resolve_interpret(interpret, impl))
     return out[:B]

@@ -7,6 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..common import resolve_interpret
 from .flash_attention import flash_attention_pallas
 from .ref import attention_ref
 
@@ -35,13 +36,13 @@ def flash_attention(
     impl: str = "xla",            # 'xla' (ref) | 'pallas' | 'pallas_interpret'
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = False,
+    interpret: Optional[bool] = None,   # None → auto: interpret on CPU only
 ):
     """GQA attention. q [B,Hq,Sq,D]; k/v [B,Hkv,Sk,D] (Sk >= Sq for decode)."""
     if impl == "xla":
         return attention_ref(q, k, v, causal=causal, window=window,
                              sm_scale=sm_scale, q_offset=q_offset)
-    interp = interpret or impl == "pallas_interpret"
+    interp = resolve_interpret(interpret, impl)
     Sq0 = q.shape[2]
     bq = min(block_q, max(8, Sq0))
     q_p, _ = _pad_to(q, 2, bq)

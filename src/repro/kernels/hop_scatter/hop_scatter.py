@@ -1,0 +1,334 @@
+"""Fused hop-delivery kernels: gather → temporal mask → segment-reduce.
+
+One traversal hop of the engine is
+
+    src_val = state[t_src]                  # gather   [E, *TS]
+    cnt_e   = src_val * edge_weights        # mask     [E, *TS]
+    arrivals = segment_sum(cnt_e, t_dst)    # deliver  [V, *TS]
+
+The XLA path materialises both [E, *TS] intermediates in HBM and lowers the
+delivery to a scatter-add.  These kernels fuse the three steps over the
+sorted-CSR block layout of ``bucket_scatter.build_layout``: per
+destination-vertex block, the block's (padded) edge slots gather their source
+rows straight from the state table, apply the per-edge weights — including
+the interval-mode cell clamps — and segment-reduce in VMEM, so no per-edge
+state tensor ever round-trips through HBM.
+
+Delivery is a PREFIX-DIFFERENCE reduction, not a scatter: edges are sorted
+by arrival, so a destination's contributions are one contiguous slot run and
+
+    out[v] = S[seg_end[v]] - S[seg_start[v]],   S = exclusive prefix sums
+
+with the boundary positions static per layout.  This keeps the reduce at
+O(E·C) work (a chunked cumsum + two static gathers — the same prefix
+machinery the engine's ETR rank contraction runs per hop), where the
+scatter-as-matmul form of ``bucket_scatter`` pays O(E·block_v·C) MXU work.
+Bit-equality with segment_sum holds whenever counts are exact integers in
+float32 — the engine's invariant (and the ETR machinery's existing
+correctness argument).
+
+The extremum variant reduces a per-edge min/max channel alongside, gated by
+the per-edge count liveness computed from the contributions already in VMEM:
+a masked min/max over block membership when the block is small (the
+TPU-shaped layouts), an in-kernel segment reduce for the big single-block
+layouts the CPU interpreter prefers.
+
+Temporal state rides with trailing axes flattened to C columns: C = 1
+(static), B (bucket), B·(B+1) (interval cells).  The interval kernel also
+applies the running-intersection clamp — cells (s, e) move to
+(max(s, sb), min(e, eb)) — via masked row/column sums, the matmul-free form
+of superstep's ``_clamp_start``/``_clamp_end`` cumsum contractions.
+
+Grid: (n_blocks,).  The state table rides along whole (the reused operand;
+its index map pins block 0), per-block operands are sliced by the grid.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: above this [block_e × block_v] footprint the extremum reduction switches
+#: from the masked broadcast (TPU-friendly) to an in-kernel segment reduce
+_MASKED_EXTREMUM_CELLS = 1 << 22
+
+
+def _chunk_len(be: int) -> int:
+    """Cumsum chunk length: cache-resident chunks make the prefix sums two
+    streaming passes instead of log(be) full-array passes."""
+    for k in (512, 256, 128):
+        if be % k == 0:
+            return k
+    return be
+
+
+def _prefix_segment_sum(contrib, sstart, send):
+    """[be, C] contributions → [bv, C] segment sums via boundary differences.
+
+    ``sstart``/``send`` are each destination's first/one-past-last slot in
+    the block (static layout tables; empty segments have sstart == send)."""
+    be, C = contrib.shape
+    K = _chunk_len(be)
+    ch = contrib.reshape(be // K, K, C)
+    local = jnp.cumsum(ch, axis=1)
+    tot = local[:, -1, :]
+    carry = jnp.cumsum(tot, axis=0) - tot          # exclusive chunk prefix
+    S = (local + carry[:, None, :]).reshape(be, C)
+    S = jnp.concatenate([jnp.zeros((1, C), S.dtype), S], axis=0)
+    return S[send] - S[sstart]
+
+
+def _segment_extremum(m_e, alive, ldst, block_v: int, neutral: float,
+                      op_is_min: bool):
+    """[be] channel → [bv] segment min/max; dead edges are neutral."""
+    m_e = jnp.where(alive, m_e, neutral)
+    be = m_e.shape[0]
+    if be * block_v <= _MASKED_EXTREMUM_CELLS:
+        cols = jax.lax.broadcasted_iota(jnp.int32, (be, block_v), 1)
+        masked = jnp.where(ldst[:, None] == cols, m_e[:, None], neutral)
+        return (jnp.min(masked, axis=0) if op_is_min
+                else jnp.max(masked, axis=0))
+    # big single-block layouts: segment reduce (pad slots → trash row)
+    seg = jnp.where(ldst >= 0, ldst, block_v)
+    red = jax.ops.segment_min if op_is_min else jax.ops.segment_max
+    return red(m_e, seg, num_segments=block_v + 1,
+               indices_are_sorted=True)[:block_v]
+
+
+def _fused_cols_kernel(state_ref, src_ref, w_ref, ss_ref, se_ref, o_ref):
+    """static/bucket fused hop: per-column weights, prefix delivery."""
+    sv = jnp.take(state_ref[...], src_ref[0], axis=0)     # [be, C]
+    contrib = sv.astype(jnp.float32) * w_ref[0]
+    o_ref[0] = _prefix_segment_sum(contrib, ss_ref[0],
+                                   se_ref[0]).astype(o_ref.dtype)
+
+
+def _fused_cols_extremum_kernel(state_ref, mch_ref, src_ref, w_ref, ss_ref,
+                                se_ref, ldst_ref, o_ref, m_ref, *,
+                                block_v: int, neutral: float,
+                                op_is_min: bool):
+    sv = jnp.take(state_ref[...], src_ref[0], axis=0)
+    contrib = sv.astype(jnp.float32) * w_ref[0]
+    o_ref[0] = _prefix_segment_sum(contrib, ss_ref[0],
+                                   se_ref[0]).astype(o_ref.dtype)
+    alive = jnp.sum(contrib, axis=1) > 0                  # count liveness
+    mch_e = jnp.take(mch_ref[...], src_ref[0], axis=0)[:, 0]
+    m_ref[0] = _segment_extremum(mch_e, alive, ldst_ref[0], block_v,
+                                 neutral, op_is_min)
+
+
+def _interval_apply(sv, w, sb, eb, B: int, Bp1: int):
+    """The interval-cell edge algebra on a block of gathered state.
+
+    Matches superstep.apply_validity(MODE_INTERVAL): clamp cell starts up to
+    sb, clamp cell ends down to eb, zero degenerate cells, scale by the edge
+    weight.  The clamp moves the below-threshold mass onto the threshold
+    row/column — here as a masked sum instead of a cumsum lookup.
+    """
+    f32 = jnp.float32
+    cells = sv.reshape(sv.shape[0], B, Bp1).astype(f32)
+    s_ids = jax.lax.broadcasted_iota(jnp.int32, (1, B, 1), 1)
+    sbx = sb[:, None, None]
+    acc_s = jnp.sum(cells * (s_ids <= sbx).astype(f32), axis=1, keepdims=True)
+    cells = (cells * (s_ids > sbx).astype(f32)
+             + (s_ids == sbx).astype(f32) * acc_s)
+    e_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, Bp1), 2)
+    ebx = eb[:, None, None]
+    acc_e = jnp.sum(cells * (e_ids >= ebx).astype(f32), axis=2, keepdims=True)
+    cells = (cells * (e_ids < ebx).astype(f32)
+             + (e_ids == ebx).astype(f32) * acc_e)
+    cells = cells * (s_ids < e_ids).astype(f32)           # valid cells only
+    cells = cells * w[:, None, None]
+    return cells.reshape(sv.shape[0], B * Bp1)
+
+
+def _fused_interval_kernel(state_ref, src_ref, w_ref, sb_ref, eb_ref,
+                           ss_ref, se_ref, o_ref, *, n_buckets: int):
+    sv = jnp.take(state_ref[...], src_ref[0], axis=0)     # [be, B*(B+1)]
+    contrib = _interval_apply(sv, w_ref[0], sb_ref[0], eb_ref[0],
+                              n_buckets, n_buckets + 1)
+    o_ref[0] = _prefix_segment_sum(contrib, ss_ref[0],
+                                   se_ref[0]).astype(o_ref.dtype)
+
+
+def _fused_interval_extremum_kernel(state_ref, mch_ref, src_ref, w_ref,
+                                    sb_ref, eb_ref, ss_ref, se_ref, ldst_ref,
+                                    o_ref, m_ref, *, block_v: int,
+                                    n_buckets: int, neutral: float,
+                                    op_is_min: bool):
+    sv = jnp.take(state_ref[...], src_ref[0], axis=0)
+    contrib = _interval_apply(sv, w_ref[0], sb_ref[0], eb_ref[0],
+                              n_buckets, n_buckets + 1)
+    o_ref[0] = _prefix_segment_sum(contrib, ss_ref[0],
+                                   se_ref[0]).astype(o_ref.dtype)
+    alive = jnp.sum(contrib, axis=1) > 0
+    mch_e = jnp.take(mch_ref[...], src_ref[0], axis=0)[:, 0]
+    m_ref[0] = _segment_extremum(mch_e, alive, ldst_ref[0], block_v,
+                                 neutral, op_is_min)
+
+
+def _scatter_cols_kernel(c_ref, ss_ref, se_ref, o_ref):
+    """Delivery-only prefix reduce of pre-materialised contributions."""
+    o_ref[0] = _prefix_segment_sum(c_ref[0].astype(jnp.float32), ss_ref[0],
+                                   se_ref[0]).astype(o_ref.dtype)
+
+
+def _scatter_extremum_kernel(m_ref_in, alive_ref, ldst_ref, m_ref, *,
+                             block_v: int, neutral: float, op_is_min: bool):
+    """Extremum twin for pre-materialised channels."""
+    m_ref[0] = _segment_extremum(m_ref_in[0], alive_ref[0] > 0, ldst_ref[0],
+                                 block_v, neutral, op_is_min)
+
+
+# =========================================================================
+# pallas_call wrappers (operands already in block-slot layout)
+# =========================================================================
+def _table_spec(n_rows: int, n_cols: int):
+    # the whole state table is one reused block: every grid step maps to it
+    return pl.BlockSpec((n_rows, n_cols), lambda b: (0, 0))
+
+
+def _slot_spec(width: int):
+    return pl.BlockSpec((1, width), lambda b: (b, 0))
+
+
+def fused_hop_cols_pallas(
+    state_p: jnp.ndarray,         # [N+1, C] — zero pad row at N
+    src_slot: jnp.ndarray,        # int32[n_blocks, block_e] — pad = N
+    w_cols: jnp.ndarray,          # f32[n_blocks, block_e, C] — pad = 0
+    seg_start: jnp.ndarray,       # int32[n_blocks, block_v]
+    seg_end: jnp.ndarray,         # int32[n_blocks, block_v]
+    local_dst: jnp.ndarray,       # int32[n_blocks, block_e] — pad = -1
+    block_v: int,
+    interpret: bool = False,
+    mch_p: Optional[jnp.ndarray] = None,   # [N+1, 1] — neutral pad row
+    neutral: float = 0.0,
+    op_is_min: bool = True,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """static/bucket fused hop; returns ([n_blocks·block_v, C], mch|None)."""
+    n_blocks, block_e, C = w_cols.shape
+    n_rows = state_p.shape[0]
+    w_spec = pl.BlockSpec((1, block_e, C), lambda b: (b, 0, 0))
+    out_spec = pl.BlockSpec((1, block_v, C), lambda b: (b, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((n_blocks, block_v, C), state_p.dtype)
+    if mch_p is None:
+        out = pl.pallas_call(
+            _fused_cols_kernel,
+            grid=(n_blocks,),
+            in_specs=[_table_spec(n_rows, C), _slot_spec(block_e), w_spec,
+                      _slot_spec(block_v), _slot_spec(block_v)],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(state_p, src_slot, w_cols, seg_start, seg_end)
+        return out.reshape(n_blocks * block_v, C), None
+    out, mch = pl.pallas_call(
+        functools.partial(_fused_cols_extremum_kernel, block_v=block_v,
+                          neutral=neutral, op_is_min=op_is_min),
+        grid=(n_blocks,),
+        in_specs=[_table_spec(n_rows, C), _table_spec(n_rows, 1),
+                  _slot_spec(block_e), w_spec, _slot_spec(block_v),
+                  _slot_spec(block_v), _slot_spec(block_e)],
+        out_specs=(out_spec, _slot_spec(block_v)),
+        out_shape=(out_shape,
+                   jax.ShapeDtypeStruct((n_blocks, block_v), jnp.float32)),
+        interpret=interpret,
+    )(state_p, mch_p, src_slot, w_cols, seg_start, seg_end, local_dst)
+    return out.reshape(n_blocks * block_v, C), mch.reshape(n_blocks * block_v)
+
+
+def fused_hop_interval_pallas(
+    state_p: jnp.ndarray,         # [N+1, B·(B+1)] flattened cells, zero pad row
+    src_slot: jnp.ndarray,        # int32[n_blocks, block_e]
+    w: jnp.ndarray,               # f32[n_blocks, block_e] — edge match, pad 0
+    sb: jnp.ndarray,              # int32[n_blocks, block_e] — start clamp
+    eb: jnp.ndarray,              # int32[n_blocks, block_e] — end clamp
+    seg_start: jnp.ndarray,
+    seg_end: jnp.ndarray,
+    local_dst: jnp.ndarray,
+    block_v: int,
+    n_buckets: int,
+    interpret: bool = False,
+    mch_p: Optional[jnp.ndarray] = None,
+    neutral: float = 0.0,
+    op_is_min: bool = True,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """interval fused hop; returns ([n_blocks·block_v, B·(B+1)], mch|None)."""
+    n_blocks, block_e = w.shape
+    C = n_buckets * (n_buckets + 1)
+    n_rows = state_p.shape[0]
+    out_spec = pl.BlockSpec((1, block_v, C), lambda b: (b, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((n_blocks, block_v, C), state_p.dtype)
+    slot_e = _slot_spec(block_e)
+    slot_v = _slot_spec(block_v)
+    if mch_p is None:
+        out = pl.pallas_call(
+            functools.partial(_fused_interval_kernel, n_buckets=n_buckets),
+            grid=(n_blocks,),
+            in_specs=[_table_spec(n_rows, C), slot_e, slot_e, slot_e, slot_e,
+                      slot_v, slot_v],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(state_p, src_slot, w, sb, eb, seg_start, seg_end)
+        return out.reshape(n_blocks * block_v, C), None
+    out, mch = pl.pallas_call(
+        functools.partial(_fused_interval_extremum_kernel, block_v=block_v,
+                          n_buckets=n_buckets, neutral=neutral,
+                          op_is_min=op_is_min),
+        grid=(n_blocks,),
+        in_specs=[_table_spec(n_rows, C), _table_spec(n_rows, 1),
+                  slot_e, slot_e, slot_e, slot_e, slot_v, slot_v, slot_e],
+        out_specs=(out_spec, slot_v),
+        out_shape=(out_shape,
+                   jax.ShapeDtypeStruct((n_blocks, block_v), jnp.float32)),
+        interpret=interpret,
+    )(state_p, mch_p, src_slot, w, sb, eb, seg_start, seg_end, local_dst)
+    return out.reshape(n_blocks * block_v, C), mch.reshape(n_blocks * block_v)
+
+
+def scatter_cols_pallas(
+    contrib: jnp.ndarray,         # [n_blocks, block_e, C] — per-slot values
+    seg_start: jnp.ndarray,
+    seg_end: jnp.ndarray,
+    block_v: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Delivery-only blocked prefix reduce; returns [n_blocks·block_v, C]."""
+    n_blocks, block_e, C = contrib.shape
+    out = pl.pallas_call(
+        _scatter_cols_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, block_e, C), lambda b: (b, 0, 0)),
+                  _slot_spec(block_v), _slot_spec(block_v)],
+        out_specs=pl.BlockSpec((1, block_v, C), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block_v, C), contrib.dtype),
+        interpret=interpret,
+    )(contrib, seg_start, seg_end)
+    return out.reshape(n_blocks * block_v, C)
+
+
+def scatter_extremum_pallas(
+    m_e: jnp.ndarray,             # f32[n_blocks, block_e] — per-slot channel
+    alive: jnp.ndarray,           # f32[n_blocks, block_e] — liveness gate
+    local_dst: jnp.ndarray,
+    block_v: int,
+    neutral: float,
+    op_is_min: bool,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Blocked segment-min/max of a pre-materialised per-edge channel."""
+    n_blocks, block_e = m_e.shape
+    out = pl.pallas_call(
+        functools.partial(_scatter_extremum_kernel, block_v=block_v,
+                          neutral=neutral, op_is_min=op_is_min),
+        grid=(n_blocks,),
+        in_specs=[_slot_spec(block_e)] * 3,
+        out_specs=_slot_spec(block_v),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block_v), jnp.float32),
+        interpret=interpret,
+    )(m_e, alive, local_dst)
+    return out.reshape(n_blocks * block_v)

@@ -1,0 +1,72 @@
+"""Oracle: the fused hop as plain jnp ops over the same block-slot inputs.
+
+Semantically the hop is  segment_sum(state[src] * weights, dst)  — the
+engine's XLA path (superstep.apply_edge + superstep.deliver) is the
+ground truth the kernel tests compare against.  This module provides the
+intermediate oracle at BLOCK granularity (same operands as the pallas
+wrappers), so a layout bug and a kernel bug show up as different failures.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .hop_scatter import _interval_apply
+
+
+def _block_segment_sum(contrib, local_dst, block_v: int):
+    """[n_blocks, block_e, C] contributions → [n_blocks·block_v, C]."""
+    n_blocks, block_e, C = contrib.shape
+    base = jnp.arange(n_blocks, dtype=jnp.int32)[:, None] * block_v
+    trash = n_blocks * block_v
+    seg = jnp.where(local_dst >= 0, local_dst + base, trash).reshape(-1)
+    return jax.ops.segment_sum(contrib.reshape(-1, C), seg,
+                               num_segments=trash + 1)[:trash]
+
+
+def _block_segment_extremum(m_e, alive, local_dst, block_v: int,
+                            neutral: float, op_is_min: bool):
+    n_blocks, block_e = m_e.shape
+    base = jnp.arange(n_blocks, dtype=jnp.int32)[:, None] * block_v
+    trash = n_blocks * block_v
+    seg = jnp.where(local_dst >= 0, local_dst + base, trash).reshape(-1)
+    vals = jnp.where(alive > 0, m_e, neutral).reshape(-1)
+    red = jax.ops.segment_min if op_is_min else jax.ops.segment_max
+    return red(vals, seg, num_segments=trash + 1)[:trash]
+
+
+def fused_hop_cols_ref(state_p, src_slot, w_cols, seg_start, seg_end,
+                       local_dst, block_v: int, mch_p=None,
+                       neutral: float = 0.0,
+                       op_is_min: bool = True) -> Tuple[jnp.ndarray,
+                                                        Optional[jnp.ndarray]]:
+    del seg_start, seg_end  # the oracle reduces by membership, not prefixes
+    contrib = state_p[src_slot] * w_cols
+    out = _block_segment_sum(contrib, local_dst, block_v)
+    if mch_p is None:
+        return out, None
+    alive = (contrib.sum(axis=-1) > 0).astype(jnp.float32)
+    mch = _block_segment_extremum(mch_p[src_slot][..., 0], alive, local_dst,
+                                  block_v, neutral, op_is_min)
+    return out, mch
+
+
+def fused_hop_interval_ref(state_p, src_slot, w, sb, eb, seg_start, seg_end,
+                           local_dst, block_v: int, n_buckets: int,
+                           mch_p=None, neutral: float = 0.0,
+                           op_is_min: bool = True):
+    del seg_start, seg_end
+    n_blocks, block_e = w.shape
+    flat = lambda a: a.reshape((n_blocks * block_e,) + a.shape[2:])
+    contrib = _interval_apply(state_p[flat(src_slot)], flat(w), flat(sb),
+                              flat(eb), n_buckets, n_buckets + 1)
+    contrib = contrib.reshape(n_blocks, block_e, -1)
+    out = _block_segment_sum(contrib, local_dst, block_v)
+    if mch_p is None:
+        return out, None
+    alive = (contrib.sum(axis=-1) > 0).astype(jnp.float32)
+    mch = _block_segment_extremum(mch_p[src_slot][..., 0], alive, local_dst,
+                                  block_v, neutral, op_is_min)
+    return out, mch

@@ -1,15 +1,18 @@
 """Wrapper: padding + implementation selection."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
+from ..common import resolve_interpret, use_pallas
 from .interval_warp import interval_warp_pallas
 from .ref import interval_warp_ref
 
 
 def interval_warp(counts, ivl, bedges, impl: str = "xla",
-                  block_n: int = 1024, interpret: bool = True):
-    if impl == "xla":
+                  block_n: int = 1024, interpret: Optional[bool] = None):
+    if not use_pallas(impl):
         return interval_warp_ref(counts, ivl, bedges)
     N = counts.shape[0]
     pad = (-N) % block_n
@@ -17,5 +20,5 @@ def interval_warp(counts, ivl, bedges, impl: str = "xla",
         counts = jnp.pad(counts, ((0, pad), (0, 0)))
         ivl = jnp.pad(ivl, ((0, pad), (0, 0)))
     out = interval_warp_pallas(counts, ivl, bedges, block_n=block_n,
-                               interpret=interpret)
+                               interpret=resolve_interpret(interpret, impl))
     return out[:N]

@@ -18,13 +18,14 @@ Layout:
                 scheduler; p50/p95/p99 latency, throughput, completion-rate
                 (the paper's Table 5 serving metrics)
 """
-from .cache import ExecutableCache, PlanCache, graph_fingerprint
+from .cache import (ExecutableCache, PlanCache, graph_fingerprint,
+                    layout_signature)
 from .compile import PlanTensor, bucket_key, compile_plan_tensor
 from .replay import ReplayReport, replay_workload
 from .scheduler import BatchScheduler, ServedResult
 
 __all__ = [
     "BatchScheduler", "ServedResult", "PlanCache", "ExecutableCache",
-    "graph_fingerprint", "PlanTensor", "bucket_key", "compile_plan_tensor",
-    "ReplayReport", "replay_workload",
+    "graph_fingerprint", "layout_signature", "PlanTensor", "bucket_key",
+    "compile_plan_tensor", "ReplayReport", "replay_workload",
 ]

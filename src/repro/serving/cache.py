@@ -5,12 +5,14 @@ invariant the scheduler can assert on, with hit/miss counters the replay
 harness reports:
 
   PlanCache        (shape bucket, graph fingerprint, mode, engine[, workers])
-                   → chosen split.  The first batch of a bucket pays one
-                   batch-aware planner pass; every later batch reuses it.
-  ExecutableCache  full dispatch key (plan key + padded batch size) → the
-                   bound batched executable from the engines.  Together with
-                   pow-2 size buckets (compile.py) this caps compilations per
-                   shape bucket at log2(max batch size).
+                   → chosen (split, hop impl).  The first batch of a bucket
+                   pays one batch-aware planner pass; every later batch
+                   reuses it.
+  ExecutableCache  full dispatch key (plan key + hop-layout signature +
+                   padded batch size) → the bound batched executable from
+                   the engines.  Together with pow-2 size buckets
+                   (compile.py) this caps compilations per shape bucket at
+                   log2(max batch size).
 
 The graph fingerprint keys cache entries to graph *content* rather than
 object identity, so a regenerated-but-identical graph still hits while a
@@ -22,6 +24,10 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from typing import Callable, Dict, Optional
+
+from ..core import engine as _E
+from ..core import engine_partitioned as _EP
+from ..core import engine_sliced as _ES
 
 
 def graph_fingerprint(graph) -> str:
@@ -50,6 +56,32 @@ def graph_fingerprint(graph) -> str:
     return fp
 
 
+def layout_signature(graph, engine: str, qry, n_workers: int,
+                     impl: str) -> tuple:
+    """The static hop-kernel layout identity a compiled executable binds.
+
+    On the kernel path (``impl != 'xla'``) an executable closes over a
+    ``kernels.hop_scatter`` block layout — dense whole-graph, per-arrival-
+    type slices, or stacked per-worker shards — so the layout's shape is
+    part of the dispatch key: two graphs may share a content fingerprint yet
+    be served by different block shapes only if the key says so.  Building
+    the signature warms the same per-graph layout caches the engine
+    executable will read (layouts are host-static: cached alongside the
+    plan, never retraced)."""
+    if impl == "xla":
+        return ()
+    if engine == "partitioned":
+        _, arrays, _ = _EP.partition_for(graph, n_workers)
+        tables, block_v = arrays.worker_hop_layouts()
+        return ("worker_hop_layout", tuple(tables["hop_ldst"].shape), block_v)
+    if engine == "sliced":
+        sb = _ES.SliceBounds.from_graph(graph)
+        layouts = _ES.slice_layouts_for(graph, qry, sb, impl)
+        return tuple(sorted(
+            (vt,) + lay.signature() for vt, lay in layouts.items()))
+    return _E.hop_layout_for(graph).signature()
+
+
 @dataclasses.dataclass
 class CacheStats:
     hits: int = 0
@@ -64,22 +96,22 @@ class CacheStats:
 
 
 class PlanCache:
-    """(shape bucket, graph fingerprint, ...) → split point."""
+    """(shape bucket, graph fingerprint, ...) → (split point, hop impl)."""
 
     def __init__(self):
-        self._plans: Dict[tuple, int] = {}
+        self._plans: Dict[tuple, tuple] = {}
         self.stats = CacheStats()
 
-    def get(self, key: tuple) -> Optional[int]:
-        split = self._plans.get(key)
-        if split is None:
+    def get(self, key: tuple) -> Optional[tuple]:
+        plan = self._plans.get(key)
+        if plan is None:
             self.stats.misses += 1
         else:
             self.stats.hits += 1
-        return split
+        return plan
 
-    def put(self, key: tuple, split: int) -> None:
-        self._plans[key] = split
+    def put(self, key: tuple, plan: tuple) -> None:
+        self._plans[key] = plan
 
     def __len__(self) -> int:
         return len(self._plans)

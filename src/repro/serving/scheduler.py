@@ -21,6 +21,14 @@ Engines: ``dense`` / ``sliced`` (engine.batch_executable), ``partitioned``
 qualifies, dense otherwise — resolved at admission so the group key is
 concrete).
 
+Hop-delivery lowering: the ``impl`` knob (``HOP_IMPLS``) pins every group on
+one lowering (``'xla'`` or the fused ``'pallas'`` hop kernel), or
+``'auto'`` lets the batch-aware planner sweep (split × impl) with the
+fitted per-impl θ_scatter slopes and dispatch each group on the winner.
+The chosen impl and its static hop-layout signature are part of the
+compiled-executable key (sharing a graph fingerprint is not enough — a
+kernel executable binds its block layout).
+
 The partitioned engine's dispatch is shard_map-native: when >1 JAX devices
 exist and divide ``n_workers`` (CI forces this with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), the group's
@@ -43,13 +51,17 @@ from ..core import engine as E
 from ..core import engine_partitioned as EP
 from ..core import engine_sliced as ES
 from ..core import query as Q
-from ..core.planner import Planner
+from ..core.planner import HOP_IMPL_CHOICES, Planner
 from ..core.stats import GraphStats
 from ..graphdata.queries import QueryInstance
-from .cache import ExecutableCache, PlanCache, graph_fingerprint
+from .cache import (ExecutableCache, PlanCache, graph_fingerprint,
+                    layout_signature)
 from .compile import bucket_key, compile_plan_tensor
 
 ENGINES = ("auto", "dense", "sliced", "partitioned")
+#: hop-delivery lowering knob: fixed, or "auto" = the batch-aware planner
+#: picks per group from the fitted per-impl θ_scatter slopes
+HOP_IMPLS = ("auto", "xla", "pallas", "pallas_interpret")
 
 
 @dataclasses.dataclass
@@ -80,6 +92,7 @@ class GroupDispatch:
     indices: List[int]           # queue positions served by this dispatch
     plan_cached: bool
     exec_cached: bool
+    impl: str = "xla"            # hop-delivery lowering the group ran on
 
 
 class BatchScheduler:
@@ -97,11 +110,15 @@ class BatchScheduler:
         exec_cache: Optional[ExecutableCache] = None,
         pad_batches: bool = True,
         use_shard_map: Optional[bool] = None,
+        impl: str = "xla",
     ):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}")
+        if impl not in HOP_IMPLS:
+            raise ValueError(f"impl must be one of {HOP_IMPLS}")
         self.graph = graph
         self.engine = engine
+        self.impl = impl
         self.n_buckets = n_buckets
         self.n_workers = n_workers
         self.use_shard_map = use_shard_map
@@ -162,29 +179,36 @@ class BatchScheduler:
 
     def _plan_group(self, queries: List[Q.PathQuery], bucket: tuple,
                     mode: int, engine: str):
+        """(split, hop impl, plan_cached) for one group.  A fixed ``impl``
+        pins the lowering and the planner only picks the split; ``'auto'``
+        sweeps (split × impl) with the fitted per-impl θ_scatter slopes."""
         qry = queries[0]
         default = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1
+        fixed_impl = None if self.impl == "auto" else self.impl
         if not self.use_planner:
-            return default, True
+            return default, fixed_impl or "xla", True
         key = (bucket, self.fingerprint, mode, engine, self.n_buckets,
-               self.n_workers if engine == "partitioned" else 0)
-        split = self.plan_cache.get(key)
-        if split is not None:
-            return split, True
-        split = self._planner_for(engine).choose_batch(queries).split
-        self.plan_cache.put(key, split)
-        return split, False
+               self.n_workers if engine == "partitioned" else 0, self.impl)
+        plan = self.plan_cache.get(key)
+        if plan is not None:
+            return plan[0], plan[1], True
+        impls = HOP_IMPL_CHOICES if fixed_impl is None else (fixed_impl,)
+        est = self._planner_for(engine).choose_batch(queries, impls=impls)
+        split, impl = est.split, fixed_impl or est.impl
+        self.plan_cache.put(key, (split, impl))
+        return split, impl, False
 
     # ------------------------------------------------------------- dispatch
     def _build_executable(self, qry: Q.PathQuery, split: int, mode: int,
-                          engine: str):
+                          engine: str, impl: str):
         if engine == "partitioned":
             return EP.batch_executable(self.graph, qry, split, mode,
                                        self.n_buckets, self.n_workers,
-                                       use_shard_map=self.use_shard_map)
+                                       use_shard_map=self.use_shard_map,
+                                       impl=impl)
         return E.batch_executable(self.graph, qry, split, mode,
                                   self.n_buckets,
-                                  sliced=(engine == "sliced"))
+                                  sliced=(engine == "sliced"), impl=impl)
 
     def flush(self, warm: bool = False) -> List[ServedResult]:
         """Drain the queue: one vmapped engine call per (bucket, mode,
@@ -208,18 +232,21 @@ class BatchScheduler:
             insts = [queue[i] for i in idxs]
             queries = [x.qry for x in insts]
             try:
-                split, plan_cached = self._plan_group(queries, bucket, mode,
-                                                      engine)
+                split, impl, plan_cached = self._plan_group(queries, bucket,
+                                                            mode, engine)
                 pt = compile_plan_tensor(queries, pad=self.pad_batches)
                 ekey = (engine, self.fingerprint, bucket, split, mode,
                         self.n_buckets,
                         self.n_workers if engine == "partitioned" else 0,
                         self.n_devices if engine == "partitioned" else 0,
+                        impl,
+                        layout_signature(self.graph, engine, queries[0],
+                                         self.n_workers, impl),
                         pt.params.shape[0])
                 exec_cached = ekey in self.exec_cache
                 run = self.exec_cache.get_or_build(
                     ekey, lambda: self._build_executable(queries[0], split,
-                                                         mode, engine))
+                                                         mode, engine, impl))
                 if warm and not exec_cached:
                     # first dispatch at this key: run once untimed so compile
                     # stays out of latency (a cache-hit executable has already
@@ -259,7 +286,7 @@ class BatchScheduler:
                 )
             dispatches.append(GroupDispatch(
                 key, engine, split, pt.n_real, pt.n_pad, dt, list(idxs),
-                plan_cached, exec_cached))
+                plan_cached, exec_cached, impl))
         self.last_dispatches = dispatches
         self.n_dispatched += len(queue)
         return out  # type: ignore[return-value]

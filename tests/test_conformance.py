@@ -79,6 +79,36 @@ def test_serving_conformance_matrix(small_dynamic_graph, matrix, name, mode):
     C.check_serving_case(small_dynamic_graph, matrix[name], mode)
 
 
+@pytest.mark.parametrize("engine,n_workers", [("dense", 0),
+                                              ("partitioned", 2)])
+def test_serving_kernel_impl_matches_xla(small_dynamic_graph, matrix, engine,
+                                         n_workers):
+    """Scheduler dispatches on the fused-kernel lowering are bit-identical
+    to the xla dispatches (representative cells; the multidevice leg and the
+    kernels leg cover the full matrix)."""
+    from repro.serving import BatchScheduler
+
+    for name in ("plain-2hop", "agg-min"):
+        queries = C.perturbed_batch(matrix[name].qry, 3)
+        outs = {}
+        for impl in ("xla", "pallas"):
+            sched = BatchScheduler(small_dynamic_graph, engine=engine,
+                                   mode=E.MODE_BUCKET, n_buckets=C.N_BUCKETS,
+                                   n_workers=max(n_workers, 1),
+                                   keep_outputs=True, impl=impl)
+            res = sched.run(queries)
+            assert len(sched.last_dispatches) == 1
+            assert sched.last_dispatches[0].impl == impl
+            outs[impl] = res
+        for a, b in zip(outs["xla"], outs["pallas"]):
+            assert a.split == b.split, name
+            for field in ("total", "per_vertex", "minmax"):
+                x, y = getattr(a, field), getattr(b, field)
+                if x is None and y is None:
+                    continue
+                assert np.array_equal(x, y), (name, engine, field)
+
+
 def test_serving_empty_batch(small_dynamic_graph):
     from repro.serving import BatchScheduler
     sched = BatchScheduler(small_dynamic_graph)

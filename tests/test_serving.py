@@ -163,9 +163,9 @@ def test_scheduler_group_planning_regression(medium_static_graph,
     seen = []
     orig = Planner.choose_batch
 
-    def spy(self, queries):
+    def spy(self, queries, *args, **kwargs):
         seen.append(len(queries))
-        return orig(self, queries)
+        return orig(self, queries, *args, **kwargs)
 
     monkeypatch.setattr(Planner, "choose_batch", spy)
     bat = server.run_workload_scheduled(wl, warm=False)
