@@ -20,6 +20,18 @@ Three measurements, one JSON artifact (``BENCH_serving.json``):
                shard_map multi-device dispatch is pinned by the
                ``multidevice`` pytest leg; this bench reports the resolved
                device count it ran with.)
+  slo          the SLO layer: online θ refit vs a static-θ baseline on the
+               same dispatch trace (predicted-vs-measured error), an
+               overload sweep (plain open loop vs deadline admission — the
+               plain p99 diverges past the deadline, admission holds its
+               admitted p99 inside it and reports reject/degrade counts and
+               goodput), and a bounded closed-loop replay with per-query
+               sampled deadlines.  BENCH_ENFORCE requires ≥80% of admitted
+               queries inside their deadline (p99 ≤ 1.3× deadline — wall-
+               clock slack; the exact 100% property is pinned on the virtual
+               clock in tests/test_serving_slo.py), plain p99 > deadline,
+               and a non-zero reject rate at 3× capacity; check_bench pins
+               the rates/ratios.
   hop_delivery xla-vs-pallas hop timings: ONE traversal-hop delivery
                (gather → mask → segment-reduce) timed as the
                materialize+segment_sum path and as the fused hop_scatter
@@ -45,7 +57,8 @@ import numpy as np
 from repro.graphdata.ldbc import LdbcParams, generate_ldbc, graph_name
 from repro.graphdata.queries import make_workload
 from repro.launch.query import GraniteServer
-from repro.serving import BatchScheduler, replay_workload
+from repro.serving import (AdmissionPolicy, BatchScheduler, PlanCache,
+                           TelemetryBuffer, replay_workload)
 from repro.serving.replay import poisson_arrivals
 
 from .common import SCALE, emit, hop_delivery_times
@@ -145,6 +158,134 @@ def hop_delivery_leg() -> dict:
     return out
 
 
+def slo_leg(g, wl, exec_cache, bat_drain_s: float, bat_tput: float,
+            n_disp: int) -> dict:
+    """The SLO serving experiment: online θ refit, deadline admission under
+    overload, and bounded closed-loop replay.
+
+    Three measurements (all on warm executables — the shared exec cache —
+    so compile time never contaminates a virtual-clock latency):
+
+      refit     the same dispatch trace recorded twice, once with the online
+                θ refit and once as a static-θ baseline: the refit must
+                shrink the tail predicted-vs-measured error (the paper's
+                cost-model accuracy claim as a LIVE property);
+      overload  open-loop replay at rates beyond batched capacity, with and
+                without deadline admission: the plain queue's p99 diverges
+                past the deadline while admission holds its ADMITTED p99
+                inside it, trading rejects for goodput;
+      closed    bounded-outstanding replay with per-query sampled deadlines:
+                backlog (max dispatch batch) bounded by the slot count.
+
+    Every knob self-scales from this run's measured batched cost per query,
+    so the leg is meaningful on any host speed; check_bench pins the
+    resulting rates/ratios against the committed baselines."""
+    n = len(wl)
+    c = bat_drain_s / n                       # measured batched s/query
+    # a query can never finish faster than its own group's dispatch, so the
+    # deadline scales from the measured PER-DISPATCH cost: ~3 dispatch times
+    # is hittable when admission keeps waves short, and far below the
+    # open-loop backlog at 3x capacity
+    d_disp = bat_drain_s / max(n_disp, 1)
+    deadline = 6.0 * d_disp
+    refit_kw = dict(refit_every=8, min_samples=8, blend=0.7)
+
+    def mk(telemetry=None, admission=None, planner_from=None):
+        s = BatchScheduler(g, use_planner=True, budget_s=BUDGET_S,
+                           plan_cache=PlanCache(), exec_cache=exec_cache,
+                           telemetry=telemetry, admission=admission)
+        if planner_from is not None:
+            s._planner.coeffs.update(planner_from._planner.coeffs)
+        return s
+
+    # ---- online refit vs static θ on the same trace
+    tb_online = TelemetryBuffer(**refit_kw)
+    tb_static = TelemetryBuffer(refit=False)
+    cal = mk(telemetry=tb_online)
+    static = mk(telemetry=tb_static)
+    for _ in range(4):
+        cal.run(wl, warm=True)
+        static.run(wl, warm=True)
+    on_stats = tb_online.error_stats()
+    off_stats = tb_static.error_stats()
+    refit = dict(
+        n_dispatches=on_stats["n"],
+        n_refits=on_stats["n_refits"],
+        online_tail_err=on_stats["tail_mean_abs_rel_err"],
+        static_tail_err=off_stats["tail_mean_abs_rel_err"],
+        improvement=off_stats["tail_mean_abs_rel_err"]
+        / max(on_stats["tail_mean_abs_rel_err"], 1e-9),
+    )
+
+    # ---- overload sweep: plain open loop vs deadline admission, same trace.
+    # The workload repeats 3x so the open-loop backlog has room to diverge
+    # well past the deadline (all shapes stay cached — no new compiles).
+    # Headroom 0.25 bounds each admitted wave to ~1 predicted dispatch:
+    # per-dispatch timings at the ~1ms scale carry up to ~2x measurement
+    # noise, and a query can queue one full wave before it is even
+    # submitted, so the structural margin has to absorb both.
+    wl_ov = list(wl) * 3
+    policy = AdmissionPolicy(headroom=0.25, degrade_impls=(),
+                             allow_engine_downgrade=False)
+
+    def admitted_p99(rep) -> float:
+        lat = rep.latencies_ms[[i for i, s in enumerate(rep.statuses)
+                                if s == "done"]]
+        return float(np.percentile(lat, 99)) if lat.size else 0.0
+
+    sweep = []
+    for mult in (1.5, 3.0):
+        rate = mult * bat_tput
+        plain = replay_workload(mk(), wl_ov, rate_qps=rate, seed=SEED,
+                                warm=True, deadline_s=deadline)
+        slo_s = mk(telemetry=TelemetryBuffer(**refit_kw), admission=policy,
+                   planner_from=cal)           # start from the refitted θ
+        adm = replay_workload(slo_s, wl_ov, rate_qps=rate, seed=SEED,
+                              warm=True, deadline_s=deadline)
+        sweep.append(dict(
+            rate_mult=mult, rate_qps=rate,
+            plain_hit_rate=plain.deadline_hit_rate,
+            plain_p99_ms=plain.latency_ms_p99,
+            admitted_hit_rate=(
+                float(np.mean(adm.latencies_ms[
+                    [i for i, s in enumerate(adm.statuses) if s == "done"]]
+                    <= deadline * 1e3)) if adm.n_completed else 0.0),
+            admitted_p99_ms=admitted_p99(adm),
+            deadline_hit_rate=adm.deadline_hit_rate,
+            reject_rate=adm.reject_rate,
+            n_degraded=adm.n_degraded,
+            goodput_qps=adm.goodput_qps,
+            plain_goodput_qps=plain.goodput_qps,
+        ))
+    top = sweep[-1]
+    overload = dict(
+        deadline_ms=deadline * 1e3,
+        rate_qps=top["rate_qps"],
+        admitted_hit_rate=top["admitted_hit_rate"],
+        admitted_p99_ms=top["admitted_p99_ms"],
+        plain_p99_ms=top["plain_p99_ms"],
+        divergence=top["plain_p99_ms"] / max(top["admitted_p99_ms"], 1e-9),
+        reject_rate=top["reject_rate"],
+        goodput_qps=top["goodput_qps"],
+        plain_goodput_qps=top["plain_goodput_qps"],
+    )
+
+    # ---- bounded closed loop with per-query sampled deadlines
+    closed_rep = replay_workload(mk(), wl, mode="closed", max_outstanding=8,
+                                 seed=SEED, warm=True,
+                                 deadline_s=(4.0 * c, 12.0 * c))
+    closed = dict(
+        max_outstanding=closed_rep.max_outstanding,
+        max_batch=closed_rep.max_batch,
+        n_dispatches=closed_rep.n_dispatches,
+        completion_rate=closed_rep.completion_rate,
+        deadline_hit_rate=closed_rep.deadline_hit_rate,
+        latency_ms_p99=closed_rep.latency_ms_p99,
+    )
+    return dict(deadline_ms=deadline * 1e3, refit=refit, sweep=sweep,
+                overload=overload, closed=closed)
+
+
 def dynamic_leg() -> dict:
     """Secondary measurement on the dynamic graph (bucket mode): per-query
     compute carries a ×n_buckets state, so vmap amortises a smaller overhead
@@ -201,6 +342,10 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
     seq_sim = sequential_replay_sim(
         poisson_arrivals(n, rate, np.random.default_rng(SEED)), seq_ms / 1e3)
 
+    # ---- SLO layer: online refit, overload admission sweep, closed loop
+    slo = slo_leg(g, wl, sched.exec_cache, bat_drain_s, bat_tput,
+                  len(sched.last_dispatches))
+
     report = dict(
         graph=graph_name(params),
         scale=SCALE,
@@ -226,6 +371,7 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
         throughput_ratio=ratio,
         replay=rep.as_dict(),
         replay_sequential_sim=seq_sim,
+        slo=slo,
         partitioned=partitioned_leg(g, wl, seq_drain_s),
         dynamic_leg=dynamic_leg(),
         hop_delivery=hop,
@@ -243,6 +389,13 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
          f"speedup={hop['bucket']['speedup']:.2f}x;"
          f"static_speedup={hop['static']['speedup']:.2f}x;"
          f"edges={hop['bucket']['edges']}")
+    emit("serving/slo_admitted_p99_us", slo["overload"]["admitted_p99_ms"]
+         * 1e3,
+         f"hit={slo['overload']['admitted_hit_rate']:.3f};"
+         f"reject={slo['overload']['reject_rate']:.3f};"
+         f"plain_p99_ms={slo['overload']['plain_p99_ms']:.1f};"
+         f"refit_err={slo['refit']['online_tail_err']:.3f}"
+         f"(static {slo['refit']['static_tail_err']:.3f})")
     print(f"# batched drain throughput {bat_tput:.1f} qps vs sequential "
           f"{seq_tput:.1f} qps → {ratio:.2f}x", flush=True)
     print(f"# fused hop kernel: static {hop['static']['speedup']:.2f}x, "
@@ -260,6 +413,33 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
             print(f"# FAIL: fused hop speedup static "
                   f"{hop['static']['speedup']:.2f}x (<1.5) or bucket "
                   f"{hop['bucket']['speedup']:.2f}x (<1.1)", flush=True)
+            sys.exit(1)
+        # SLO acceptance: at 3x capacity the plain open loop must blow past
+        # the deadline while admission holds its admitted queries inside
+        # theirs.  The EXACT property (100% of admitted inside the deadline
+        # under consistent predictions) is pinned deterministically by
+        # tests/test_serving_slo.py on the virtual clock; here dispatches
+        # are ~1ms wall-time measurements, so the floor tolerates host
+        # jitter: >=80% of admitted hit, p99 within 1.3x of the deadline —
+        # still far under the plain open loop's 2.5-4x divergence.
+        ov = slo["overload"]
+        if ov["admitted_hit_rate"] < 0.8:
+            print(f"# FAIL: admitted deadline-hit rate "
+                  f"{ov['admitted_hit_rate']:.3f} < 0.8", flush=True)
+            sys.exit(1)
+        if ov["admitted_p99_ms"] > 1.3 * ov["deadline_ms"]:
+            print(f"# FAIL: admitted p99 {ov['admitted_p99_ms']:.1f}ms over "
+                  f"1.3x deadline {ov['deadline_ms']:.1f}ms", flush=True)
+            sys.exit(1)
+        if ov["plain_p99_ms"] <= ov["deadline_ms"]:
+            print(f"# FAIL: plain open loop did not diverge "
+                  f"(p99 {ov['plain_p99_ms']:.1f}ms <= deadline "
+                  f"{ov['deadline_ms']:.1f}ms) — overload rate too low",
+                  flush=True)
+            sys.exit(1)
+        if not ov["reject_rate"] > 0:
+            print("# FAIL: admission rejected nothing under 3x overload",
+                  flush=True)
             sys.exit(1)
     return report
 

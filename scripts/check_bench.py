@@ -56,6 +56,22 @@ CHECKS = [
      "exact", 0),
     ("BENCH_serving.json", "partitioned.exchange_per_superstep.etr",
      "exact", 0),
+    # ---- SLO layer: online refit, deadline admission, bounded closed loop.
+    # benchmarks/serving.py separately enforces the ABSOLUTE acceptance
+    # (admitted p99 <= deadline < plain p99, reject_rate > 0) via
+    # BENCH_ENFORCE; the gate pins the ratios so the layer cannot silently
+    # decay.  The closed-loop counters are structural (wave composition is
+    # deterministic given the seeded workload) and pinned exactly.
+    ("BENCH_serving.json", "slo.refit.improvement", "min_frac", 0.30),
+    ("BENCH_serving.json", "slo.refit.online_tail_err", "max_rise", 2.50),
+    ("BENCH_serving.json", "slo.overload.admitted_hit_rate",
+     "min_frac", 0.80),
+    ("BENCH_serving.json", "slo.overload.divergence", "min_frac", 0.40),
+    ("BENCH_serving.json", "slo.overload.reject_rate", "max_rise", 1.30),
+    ("BENCH_serving.json", "slo.closed.max_outstanding", "exact", 0),
+    ("BENCH_serving.json", "slo.closed.max_batch", "exact", 0),
+    ("BENCH_serving.json", "slo.closed.n_dispatches", "exact", 0),
+    ("BENCH_serving.json", "slo.closed.completion_rate", "min_frac", 0.95),
     # ---- fused hop kernel vs materialize+segment_sum: the per-impl hop
     # timings.  Structural edge counts exact (same seed → same graph); the
     # speedup ratios in a band (benchmarks/serving.py separately enforces

@@ -8,6 +8,10 @@
 #   kernels      the kernel-layer equivalence leg (`-m kernels`): fused hop
 #                kernel vs the XLA hop across modes × aggregates, layout
 #                property tests
+#   serving      the SLO serving layer (`-m serving`): deadline EDF,
+#                admission control, online θ refit, and both replay modes on
+#                the FakeDispatcher virtual clock (tier-1 also runs these;
+#                the dedicated leg keeps the SLO surface visible in the gate)
 #   conformance  the four-way differential matrix at CONFORMANCE_SCALE=ci
 #                (full worker sweep + all ETR operators + the pallas impl
 #                axis), selected with `-m conformance` — tier-1 already runs
@@ -31,6 +35,8 @@ python -m pytest -x -q
 if [[ "${1:-}" != "--fast" ]]; then
   echo "== kernels: fused hop kernel vs XLA hop equivalence (-m kernels) =="
   python -m pytest -m kernels -x -q
+  echo "== serving SLO: deadlines/EDF, admission, online refit, replay (-m serving) =="
+  python -m pytest -m serving -x -q
   echo "== conformance: four-way differential matrix at CI scale (-m conformance) =="
   CONFORMANCE_SCALE=ci python -m pytest -m conformance -x -q
   echo "== multidevice: shard_map serving vs vmap simulation on 8 forced devices =="

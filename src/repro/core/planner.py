@@ -82,12 +82,24 @@ DEFAULT_COEFFS = {
 #: the impl axis plan selection sweeps when asked to choose a lowering
 HOP_IMPL_CHOICES = ("xla", "pallas")
 
+#: canonical coefficient basis: a PlanEstimate's ``features`` vector is
+#: indexed by this tuple, and ``t_ms == features @ coeff_vector(coeffs)``
+#: EXACTLY (the scatter-delta trick is encoded as +e/w on the chosen impl's
+#: column and -e/w on the xla column, so impl='xla' contributes zero).  This
+#: is the contract the serving telemetry's online refit relies on: refitting
+#: θ over recorded (features, measured) dispatch rows re-calibrates the very
+#: predictions admission control makes.
+COEFF_KEYS = ("theta0", "theta_init", "theta_v", "theta_e", "theta_etr",
+              "theta_m", "theta_net", "theta_net_etr",
+              "theta_scatter_xla", "theta_scatter_pallas")
+_CK = {k: i for i, k in enumerate(COEFF_KEYS)}
 
-def _scatter_delta(coeffs: dict, impl: str) -> float:
-    """Per-edge delivery-cost delta of ``impl`` vs the xla baseline."""
-    base = "pallas" if impl in ("pallas", "pallas_interpret") else "xla"
-    return (float(coeffs.get(f"theta_scatter_{base}", 0.0))
-            - float(coeffs.get("theta_scatter_xla", 0.0)))
+
+def coeff_vector(coeffs: dict) -> np.ndarray:
+    """The θ vector over the COEFF_KEYS basis (missing keys → defaults)."""
+    return np.asarray([float(coeffs.get(k, DEFAULT_COEFFS.get(k, 0.0)))
+                       for k in COEFF_KEYS])
+
 
 _COEFF_PATH = os.path.join(os.path.dirname(__file__), "..", "configs", "cost_coeffs.json")
 
@@ -121,6 +133,8 @@ class StepEstimate:
     e_slice: float   # typed traversal-edge extent processed
     etr: bool
     m_net: float = 0.0  # estimated cross-partition boundary messages
+    #: feature row over the COEFF_KEYS basis (t_ms == features @ θ)
+    features: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -129,6 +143,9 @@ class PlanEstimate:
     t_ms: float
     steps: List[StepEstimate]
     impl: str = "xla"   # hop-delivery lowering the estimate was costed at
+    #: summed step features over COEFF_KEYS (t_ms == features @ coeff_vector);
+    #: for estimate_batch, the batch-summed features
+    features: Optional[np.ndarray] = None
 
 
 def _clause_freq(stats: GraphStats, clauses: Sequence[Q.Clause], ent_type: int,
@@ -186,6 +203,7 @@ def estimate_segment(
     steps: List[StepEstimate] = []
     prev_m_e = None
     w = max(1, int(n_workers))
+    theta = coeff_vector(coeffs)
     for i, vp in enumerate(v_preds):
         V_sigma = stats.type_count(vp.vtype)
         if i == 0:
@@ -197,7 +215,8 @@ def estimate_segment(
             f_v = V_sigma
         m_v = a_v * (f_v / max(V_sigma, 1e-9))               # Eq. 2
         if i >= len(e_preds):
-            steps.append(StepEstimate(a_v, f_v, m_v, 0, 0, 0, 0.0, V_sigma, 0.0, False))
+            steps.append(StepEstimate(a_v, f_v, m_v, 0, 0, 0, 0.0, V_sigma, 0.0,
+                                      False, features=np.zeros(len(COEFF_KEYS))))
             break
         ep = e_preds[i]
         deg = stats.degree(vp.vtype, ep.etype, ep.direction)
@@ -224,30 +243,36 @@ def estimate_segment(
         # θ_net coefficients were fitted on) — ETR hops ship only the
         # boundary rank summaries of cut segments (see engine_partitioned)
         m_net = 0.0
-        theta_net = coeffs.get("theta_net", 0.0)
         if w > 1:
             if ep.etr_op != -1:
                 m_net = etr_exchange_volume
-                theta_net = coeffs.get("theta_net_etr",
-                                       coeffs.get("theta_net", 0.0))
             else:
                 m_net = exchange_volume * (2.0 if extremum_channel else 1.0)
-        t = (
-            coeffs["theta0"]
-            + ((coeffs["theta_init"] if i == 0 else coeffs["theta_v"]) * V_sigma
-               + coeffs["theta_e"] * e_slice
-               # fused-hop saving applies to plain hops only: ETR hops
-               # materialise per-edge counts by construction and only swap
-               # the delivery step, which the fitted full-hop slope would
-               # over-credit
-               + (_scatter_delta(coeffs, impl) * e_slice
-                  if ep.etr_op == -1 else 0.0)
-               + (coeffs["theta_etr"] * e_slice if ep.etr_op != -1 else 0.0)
-               + coeffs["theta_m"] * max(m_e, 0.0)) / w
-            + theta_net * m_net
-        )
+        # the superstep cost as a feature row over the COEFF_KEYS basis —
+        # t is the dot product with θ, so the serving telemetry can refit θ
+        # against measured dispatch times on exactly these columns
+        feat = np.zeros(len(COEFF_KEYS))
+        feat[_CK["theta0"]] = 1.0
+        feat[_CK["theta_init" if i == 0 else "theta_v"]] = V_sigma / w
+        feat[_CK["theta_e"]] = e_slice / w
+        if ep.etr_op != -1:
+            feat[_CK["theta_etr"]] = e_slice / w
+            feat[_CK["theta_net_etr"]] = m_net
+        else:
+            # fused-hop saving applies to plain hops only: ETR hops
+            # materialise per-edge counts by construction and only swap
+            # the delivery step, which the fitted full-hop slope would
+            # over-credit.  The delta-vs-xla encoding keeps impl='xla'
+            # contributing exactly zero (historical model unchanged).
+            base = ("pallas" if impl in ("pallas", "pallas_interpret")
+                    else "xla")
+            feat[_CK[f"theta_scatter_{base}"]] += e_slice / w
+            feat[_CK["theta_scatter_xla"]] -= e_slice / w
+            feat[_CK["theta_net"]] = m_net
+        feat[_CK["theta_m"]] = max(m_e, 0.0) / w
+        t = float(feat @ theta)
         steps.append(StepEstimate(a_v, f_v, m_v, a_e, f_e, m_e, t, V_sigma, e_slice,
-                                  ep.etr_op != -1, m_net))
+                                  ep.etr_op != -1, m_net, features=feat))
         prev_m_e = max(m_e, 0.0)
     return steps
 
@@ -314,7 +339,10 @@ class Planner:
                 impl=impl,
             )
         t = sum(s.t_ms for s in steps)
-        return PlanEstimate(split, t, steps, impl)
+        feats = [s.features for s in steps if s.features is not None]
+        features = (np.sum(feats, axis=0) if feats
+                    else np.zeros(len(COEFF_KEYS)))
+        return PlanEstimate(split, t, steps, impl, features)
 
     def choose(self, qry: Q.PathQuery,
                impls: Sequence[str] = ("xla",)) -> PlanEstimate:
@@ -345,7 +373,7 @@ class Planner:
         assert queries, "empty batch"
         ests = [self.estimate(q, split, impl) for q in queries]
         return PlanEstimate(split, sum(e.t_ms for e in ests), ests[0].steps,
-                            impl)
+                            impl, np.sum([e.features for e in ests], axis=0))
 
     def choose_batch(self, queries: Sequence[Q.PathQuery],
                      impls: Sequence[str] = ("xla",)) -> PlanEstimate:

@@ -14,18 +14,34 @@ Layout:
                 model, dispatches ONE vmapped engine call per group
                 (aggregates and the partitioned engine included — no
                 per-query fallback)
-  replay.py     open-loop Poisson replay of the LDBC workload through the
-                scheduler; p50/p95/p99 latency, throughput, completion-rate
-                (the paper's Table 5 serving metrics)
+  replay.py     open-loop Poisson + closed-loop bounded-outstanding replay
+                of the LDBC workload through the scheduler; p50/p95/p99
+                latency, throughput, completion-rate, deadline-hit rate,
+                goodput (the paper's Table 5 serving metrics, plus SLO
+                accounting)
+  admission.py  deadline admission control: cost-model-predicted wait +
+                service vs deadline → admit / degrade (cheaper impl,
+                dense→sliced, bounded dispatch quantum) / reject
+  telemetry.py  (predicted, measured) dispatch-cost ring buffer + periodic
+                online θ refit — prediction error shrinks during serving
+  testing.py    FakeDispatcher: synthetic service times on a virtual clock,
+                zero JAX — the deterministic harness the SLO layer is
+                tested on
 """
+from .admission import (AdmissionController, AdmissionDecision,
+                        AdmissionPolicy)
 from .cache import (ExecutableCache, PlanCache, graph_fingerprint,
                     layout_signature)
 from .compile import PlanTensor, bucket_key, compile_plan_tensor
 from .replay import ReplayReport, replay_workload
-from .scheduler import BatchScheduler, ServedResult
+from .scheduler import BatchScheduler, GroupDispatch, ServedResult
+from .telemetry import TelemetryBuffer
+from .testing import FakeDispatcher
 
 __all__ = [
-    "BatchScheduler", "ServedResult", "PlanCache", "ExecutableCache",
-    "graph_fingerprint", "layout_signature", "PlanTensor", "bucket_key",
-    "compile_plan_tensor", "ReplayReport", "replay_workload",
+    "BatchScheduler", "ServedResult", "GroupDispatch", "PlanCache",
+    "ExecutableCache", "graph_fingerprint", "layout_signature", "PlanTensor",
+    "bucket_key", "compile_plan_tensor", "ReplayReport", "replay_workload",
+    "AdmissionController", "AdmissionDecision", "AdmissionPolicy",
+    "TelemetryBuffer", "FakeDispatcher",
 ]

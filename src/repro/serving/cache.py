@@ -113,6 +113,18 @@ class PlanCache:
     def put(self, key: tuple, plan: tuple) -> None:
         self._plans[key] = plan
 
+    def peek(self, key: tuple) -> Optional[tuple]:
+        """Lookup WITHOUT touching the hit/miss counters — for admission
+        control, which consults the cache but must not skew the steady-state
+        no-replan invariant the counters assert."""
+        return self._plans.get(key)
+
+    def clear(self) -> None:
+        """Drop every cached plan (an online θ refit invalidates them: the
+        best split may have moved).  Counters are kept — clears are part of
+        the serving history, not a reset of it."""
+        self._plans.clear()
+
     def __len__(self) -> int:
         return len(self._plans)
 

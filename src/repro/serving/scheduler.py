@@ -37,10 +37,34 @@ query-batch axis is vmapped INSIDE the shard_map body, so ONE dispatch runs
 exchange between supersteps; with one device the worker axis runs in the
 bit-identical vmap simulation.  ``use_shard_map=False`` forces the
 simulation; the resolved device count is part of the executable-cache key.
+
+SLO layer (serving/admission.py, serving/telemetry.py):
+
+  deadlines  every queue entry carries an absolute deadline (``submit``'s
+             ``deadline_s`` is relative to ``now``); ``flush`` dispatches
+             groups EARLIEST-DEADLINE-FIRST (group deadline = its most
+             urgent member; ties keep arrival order, so the historical
+             no-deadline behaviour is unchanged);
+  admission  with an ``admission`` controller attached, ``submit`` predicts
+             wait + service from the live cost model and returns an
+             AdmissionDecision — rejected queries never enter the queue,
+             degraded ones carry per-entry impl/engine/batch-cap overrides
+             that join the group key (degraded groups dispatch separately,
+             in bounded chunks the EDF order can interleave);
+  telemetry  every timed dispatch records (features, predicted, measured)
+             into the TelemetryBuffer; periodic online θ refit updates the
+             planners' coefficients in place (and clears the plan cache so
+             stale split choices are re-planned once).
+
+The ``dispatcher`` hook swaps the JAX build-and-run step for an injected one
+(serving/testing.FakeDispatcher): all SLO control logic — grouping, EDF,
+chunking, admission, telemetry — is testable on a virtual clock with zero
+compilation.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -51,12 +75,14 @@ from ..core import engine as E
 from ..core import engine_partitioned as EP
 from ..core import engine_sliced as ES
 from ..core import query as Q
-from ..core.planner import HOP_IMPL_CHOICES, Planner
+from ..core.planner import HOP_IMPL_CHOICES, Planner, coeff_vector
 from ..core.stats import GraphStats
 from ..graphdata.queries import QueryInstance
+from .admission import AdmissionController, AdmissionDecision, AdmissionPolicy
 from .cache import (ExecutableCache, PlanCache, graph_fingerprint,
                     layout_signature)
 from .compile import bucket_key, compile_plan_tensor
+from .telemetry import TelemetryBuffer
 
 ENGINES = ("auto", "dense", "sliced", "partitioned")
 #: hop-delivery lowering knob: fixed, or "auto" = the batch-aware planner
@@ -78,12 +104,24 @@ class ServedResult:
     per_vertex: Optional[np.ndarray] = None
     minmax: Optional[np.ndarray] = None
     error: str = ""              # non-empty when the group dispatch failed
+    deadline: float = math.inf   # absolute deadline the entry carried
+
+
+@dataclasses.dataclass
+class QueueEntry:
+    """One admitted query waiting in the scheduler's queue."""
+    inst: QueryInstance
+    deadline: float = math.inf   # absolute
+    arrival: float = 0.0
+    impl: Optional[str] = None   # admission-degradation overrides (None =
+    engine: Optional[str] = None  # scheduler defaults)
+    max_batch: Optional[int] = None
 
 
 @dataclasses.dataclass
 class GroupDispatch:
     """One vmapped engine call: the scheduler's unit of work."""
-    key: tuple                   # (bucket, mode, engine)
+    key: tuple                   # (bucket, mode, engine, impl override)
     engine: str
     split: int
     n_real: int
@@ -93,6 +131,8 @@ class GroupDispatch:
     plan_cached: bool
     exec_cached: bool
     impl: str = "xla"            # hop-delivery lowering the group ran on
+    deadline: float = math.inf   # most urgent member's deadline (EDF key)
+    predicted_ms: float = 0.0    # cost-model prediction (telemetry rows)
 
 
 class BatchScheduler:
@@ -111,6 +151,10 @@ class BatchScheduler:
         pad_batches: bool = True,
         use_shard_map: Optional[bool] = None,
         impl: str = "xla",
+        admission=None,
+        telemetry: Optional[TelemetryBuffer] = None,
+        dispatcher=None,
+        clock=time.perf_counter,
     ):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}")
@@ -138,15 +182,46 @@ class BatchScheduler:
         self._stats = GraphStats(graph, n_time_buckets=n_buckets)
         self._planner = Planner(graph, self._stats)
         self._planner_part: Optional[Planner] = None   # built on first use
-        self._queue: List[QueryInstance] = []
+        self._queue: List[QueueEntry] = []
         self.last_dispatches: List[GroupDispatch] = []
         self.n_dispatched = 0
+        # ---- SLO layer (all optional; None keeps the historical behaviour)
+        if isinstance(admission, AdmissionPolicy):
+            admission = AdmissionController(admission)
+        self.admission: Optional[AdmissionController] = admission
+        self.telemetry = telemetry
+        self.dispatcher = dispatcher
+        self._clock = clock
+        self.n_rejected = 0
+        self.n_degraded = 0
 
     # ------------------------------------------------------------ admission
-    def submit(self, inst: Union[QueryInstance, Q.PathQuery]) -> None:
+    def submit(self, inst: Union[QueryInstance, Q.PathQuery],
+               deadline_s: Optional[float] = None,
+               now: Optional[float] = None) -> Optional[AdmissionDecision]:
+        """Enqueue a query.  ``deadline_s`` is relative to ``now`` (default:
+        the scheduler's clock — replay harnesses pass their virtual time).
+        With an admission controller attached, returns its decision — a
+        rejected query never enters the queue; without one, every submit
+        admits (deadlines still order the flush)."""
         if isinstance(inst, Q.PathQuery):
             inst = QueryInstance("adhoc", inst, {})
-        self._queue.append(inst)
+        if now is None:
+            now = self._clock() if (deadline_s is not None
+                                    or self.admission is not None) else 0.0
+        if self.admission is not None:
+            dec = self.admission.decide(self, inst, now, deadline_s)
+            if not dec.admitted:
+                self.n_rejected += 1
+                return dec
+            if dec.action == "degrade":
+                self.n_degraded += 1
+            self._queue.append(QueueEntry(inst, dec.deadline, now, dec.impl,
+                                          dec.engine, dec.max_batch))
+            return dec
+        deadline = math.inf if deadline_s is None else now + float(deadline_s)
+        self._queue.append(QueueEntry(inst, deadline, now))
+        return None
 
     @property
     def queued(self) -> int:
@@ -177,18 +252,25 @@ class BatchScheduler:
                                          partitioning=arrays)
         return self._planner_part
 
+    def _plan_key(self, bucket: tuple, mode: int, engine: str,
+                  impl_choice: str) -> tuple:
+        return (bucket, self.fingerprint, mode, engine, self.n_buckets,
+                self.n_workers if engine == "partitioned" else 0, impl_choice)
+
     def _plan_group(self, queries: List[Q.PathQuery], bucket: tuple,
-                    mode: int, engine: str):
+                    mode: int, engine: str,
+                    impl_override: Optional[str] = None):
         """(split, hop impl, plan_cached) for one group.  A fixed ``impl``
+        (the scheduler's, or a per-group admission-degradation override)
         pins the lowering and the planner only picks the split; ``'auto'``
         sweeps (split × impl) with the fitted per-impl θ_scatter slopes."""
         qry = queries[0]
         default = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1
-        fixed_impl = None if self.impl == "auto" else self.impl
+        impl_choice = impl_override or self.impl
+        fixed_impl = None if impl_choice == "auto" else impl_choice
         if not self.use_planner:
             return default, fixed_impl or "xla", True
-        key = (bucket, self.fingerprint, mode, engine, self.n_buckets,
-               self.n_workers if engine == "partitioned" else 0, self.impl)
+        key = self._plan_key(bucket, mode, engine, impl_choice)
         plan = self.plan_cache.get(key)
         if plan is not None:
             return plan[0], plan[1], True
@@ -210,62 +292,124 @@ class BatchScheduler:
                                   self.n_buckets,
                                   sliced=(engine == "sliced"), impl=impl)
 
+    def _dispatch_jax(self, queries: List[Q.PathQuery], split: int, mode: int,
+                      engine: str, impl: str, bucket: tuple, pt, warm: bool):
+        """The real build-and-run step: executable cache → one vmapped call,
+        timed.  Swapped out wholesale by an injected ``dispatcher``."""
+        ekey = (engine, self.fingerprint, bucket, split, mode,
+                self.n_buckets,
+                self.n_workers if engine == "partitioned" else 0,
+                self.n_devices if engine == "partitioned" else 0,
+                impl,
+                layout_signature(self.graph, engine, queries[0],
+                                 self.n_workers, impl),
+                pt.params.shape[0])
+        exec_cached = ekey in self.exec_cache
+        run = self.exec_cache.get_or_build(
+            ekey, lambda: self._build_executable(queries[0], split,
+                                                 mode, engine, impl))
+        if warm and not exec_cached:
+            # first dispatch at this key: run once untimed so compile
+            # stays out of latency (a cache-hit executable has already
+            # been traced and run at this key)
+            jax.block_until_ready(run(pt.params).total)
+        t0 = time.perf_counter()
+        res = run(pt.params)
+        jax.block_until_ready(res.total)
+        return res, time.perf_counter() - t0, exec_cached
+
+    def _record_telemetry(self, queries: List[Q.PathQuery], split: int,
+                          engine: str, impl: str, pt, dt: float) -> float:
+        """One (features, predicted, measured) telemetry row per timed
+        dispatch; periodic online θ refit updates the live planners (and
+        clears the plan cache once, so stale split choices re-plan against
+        the new coefficients)."""
+        planner = self._planner_for(engine)
+        feats = planner.estimate_batch(queries, split, impl=impl).features
+        if pt.n_pad:
+            # padded rows run too: they repeat instance 0's parameters
+            feats = feats + pt.n_pad * planner.estimate(
+                queries[0], split, impl).features
+        predicted_ms = float(feats @ coeff_vector(planner.coeffs))
+        self.telemetry.record(feats, predicted_ms, dt * 1e3)
+        if self.telemetry.should_refit():
+            new = self.telemetry.refit(planner.coeffs)
+            self._planner.coeffs.update(new)
+            if self._planner_part is not None:
+                self._planner_part.coeffs.update(new)
+            self.plan_cache.clear()
+        return predicted_ms
+
     def flush(self, warm: bool = False) -> List[ServedResult]:
         """Drain the queue: one vmapped engine call per (bucket, mode,
-        engine) group; results return in submission order.  ``warm=True``
-        runs each executable once untimed first (compile excluded from
-        latency, as the paper excludes load time)."""
+        engine, impl-override) group chunk, dispatched EARLIEST-DEADLINE-
+        FIRST (no-deadline entries all tie at +inf, so the historical
+        arrival order is preserved); results return in submission order.
+        ``warm=True`` runs each executable once untimed first (compile
+        excluded from latency, as the paper excludes load time)."""
         queue, self._queue = self._queue, []
+        if self.admission is not None:
+            self.admission.on_flush()
         if not queue:
             self.last_dispatches = []
             return []
         groups: Dict[tuple, List[int]] = {}
-        for i, inst in enumerate(queue):
-            key = (bucket_key(inst.qry), self._mode_for(inst.qry),
-                   self._engine_for(inst.qry))
+        for i, entry in enumerate(queue):
+            qry = entry.inst.qry
+            key = (bucket_key(qry), self._mode_for(qry),
+                   entry.engine or self._engine_for(qry), entry.impl)
             groups.setdefault(key, []).append(i)
+
+        # EDF at dispatch-chunk granularity: each group's members sort by
+        # deadline, split into bounded chunks when any member carries an
+        # admission batch cap, and every chunk competes in one global
+        # earliest-deadline order (seq breaks ties by arrival).
+        units: List[tuple] = []
+        seq = 0
+        for key, idxs in groups.items():
+            idxs = sorted(idxs, key=lambda i: (queue[i].deadline, i))
+            caps = [queue[i].max_batch for i in idxs
+                    if queue[i].max_batch is not None]
+            cap = min(caps) if caps else len(idxs)
+            for k in range(0, len(idxs), cap):
+                chunk = idxs[k:k + cap]
+                units.append((min(queue[i].deadline for i in chunk), seq,
+                              key, chunk))
+                seq += 1
+        units.sort(key=lambda u: (u[0], u[1]))
 
         out: List[Optional[ServedResult]] = [None] * len(queue)
         dispatches: List[GroupDispatch] = []
-        for key, idxs in groups.items():
-            bucket, mode, engine = key
-            insts = [queue[i] for i in idxs]
+        for group_deadline, _, key, idxs in units:
+            bucket, mode, engine, impl_over = key
+            insts = [queue[i].inst for i in idxs]
             queries = [x.qry for x in insts]
             try:
-                split, impl, plan_cached = self._plan_group(queries, bucket,
-                                                            mode, engine)
+                split, impl, plan_cached = self._plan_group(
+                    queries, bucket, mode, engine, impl_override=impl_over)
                 pt = compile_plan_tensor(queries, pad=self.pad_batches)
-                ekey = (engine, self.fingerprint, bucket, split, mode,
-                        self.n_buckets,
-                        self.n_workers if engine == "partitioned" else 0,
-                        self.n_devices if engine == "partitioned" else 0,
-                        impl,
-                        layout_signature(self.graph, engine, queries[0],
-                                         self.n_workers, impl),
-                        pt.params.shape[0])
-                exec_cached = ekey in self.exec_cache
-                run = self.exec_cache.get_or_build(
-                    ekey, lambda: self._build_executable(queries[0], split,
-                                                         mode, engine, impl))
-                if warm and not exec_cached:
-                    # first dispatch at this key: run once untimed so compile
-                    # stays out of latency (a cache-hit executable has already
-                    # been traced and run at this key)
-                    jax.block_until_ready(run(pt.params).total)
-                t0 = time.perf_counter()
-                res = run(pt.params)
-                jax.block_until_ready(res.total)
-                dt = time.perf_counter() - t0
+                if self.dispatcher is not None:
+                    res, dt = self.dispatcher.dispatch(
+                        self, queries, split, mode, engine, impl, pt, warm)
+                    exec_cached = True
+                else:
+                    res, dt, exec_cached = self._dispatch_jax(
+                        queries, split, mode, engine, impl, bucket, pt, warm)
             except Exception as e:
                 # a failing group (e.g. a non-sliceable query forced onto the
                 # sliced engine, or an unsupported op surfacing at trace time)
                 # must not take the rest of the flush with it
                 for i in idxs:
                     out[i] = ServedResult(
-                        template=queue[i].template, engine=engine, split=-1,
-                        count=-1.0, latency_ms=0.0, ok=False,
-                        batch_size=len(idxs), error=str(e))
+                        template=queue[i].inst.template, engine=engine,
+                        split=-1, count=-1.0, latency_ms=0.0, ok=False,
+                        batch_size=len(idxs), error=str(e),
+                        deadline=queue[i].deadline)
                 continue
+            predicted_ms = 0.0
+            if self.telemetry is not None:
+                predicted_ms = self._record_telemetry(queries, split, engine,
+                                                      impl, pt, dt)
             per_query_ms = dt * 1e3 / pt.n_real
             ok = per_query_ms <= self.budget_s * 1e3
 
@@ -283,10 +427,11 @@ class BatchScheduler:
                                 else None),
                     minmax=(mm[j] if self.keep_outputs and mm is not None
                             else None),
+                    deadline=queue[i].deadline,
                 )
             dispatches.append(GroupDispatch(
                 key, engine, split, pt.n_real, pt.n_pad, dt, list(idxs),
-                plan_cached, exec_cached, impl))
+                plan_cached, exec_cached, impl, group_deadline, predicted_ms))
         self.last_dispatches = dispatches
         self.n_dispatched += len(queue)
         return out  # type: ignore[return-value]
@@ -306,3 +451,12 @@ class BatchScheduler:
             n_plans=len(self.plan_cache),
             n_executables=len(self.exec_cache),
         )
+
+    def slo_report(self) -> dict:
+        """Admission + telemetry counters (all zero without an SLO layer)."""
+        d = dict(n_rejected=self.n_rejected, n_degraded=self.n_degraded)
+        if self.admission is not None:
+            d["admission"] = self.admission.report()
+        if self.telemetry is not None:
+            d["telemetry"] = self.telemetry.error_stats()
+        return d

@@ -1,0 +1,106 @@
+"""Property tests for the batch scheduler's flush invariants (hypothesis).
+
+Pinned properties, over arbitrary workload mixes and submission orders:
+
+  * flush returns results in SUBMISSION order, and every query gets ITS OWN
+    answer back — grouping, EDF reordering, and chunking never permute or
+    alias results (FakeDispatcher's per-query fake counts make aliasing
+    detectable);
+  * grouping is invariant to submission permutation within a shape bucket:
+    the same multiset of dispatch batch sizes, the same per-group members;
+  * with deadlines attached, dispatches leave in earliest-deadline-first
+    order regardless of submission order.
+
+The seeded (non-hypothesis) versions of these properties run unconditionally
+in tests/test_serving_slo.py; this module deepens them when the optional dep
+is installed.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep "
+    "(pip install hypothesis)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.graphdata.queries import make_workload  # noqa: E402
+from repro.serving import BatchScheduler  # noqa: E402
+from repro.serving.testing import FakeDispatcher, fake_count  # noqa: E402
+
+pytestmark = pytest.mark.serving
+
+TEMPLATES = ("Q1", "Q2", "Q4")
+POOL_PER_TEMPLATE = 4
+
+
+def _pool(graph):
+    return {t: make_workload(graph, templates=(t,),
+                             n_per_template=POOL_PER_TEMPLATE, seed=101)
+            for t in TEMPLATES}
+
+
+@st.composite
+def workload_and_order(draw):
+    """(picks, permutation): which pool instances to serve, in what order."""
+    picks = draw(st.lists(
+        st.tuples(st.sampled_from(TEMPLATES),
+                  st.integers(0, POOL_PER_TEMPLATE - 1)),
+        min_size=1, max_size=10))
+    perm = draw(st.permutations(range(len(picks))))
+    return picks, perm
+
+
+@settings(max_examples=40, deadline=None)
+@given(wo=workload_and_order())
+def test_flush_submission_order_and_own_answers(medium_static_graph, wo):
+    pool = _pool(medium_static_graph)
+    picks, perm = wo
+    wl = [pool[t][i] for t, i in picks]
+    submitted = [wl[i] for i in perm]
+    res = BatchScheduler(medium_static_graph,
+                         dispatcher=FakeDispatcher()).run(submitted)
+    assert len(res) == len(submitted)
+    for inst, r in zip(submitted, res):
+        assert r.count == fake_count(inst.qry)
+        assert r.ok and r.error == ""
+
+
+@settings(max_examples=40, deadline=None)
+@given(wo=workload_and_order())
+def test_grouping_invariant_under_permutation(medium_static_graph, wo):
+    """Any permutation of the same multiset of queries produces the same
+    multiset of (engine, batch size) dispatches — and each dispatch carries
+    exactly the queries of one shape bucket."""
+    pool = _pool(medium_static_graph)
+    picks, perm = wo
+    wl = [pool[t][i] for t, i in picks]
+
+    def dispatch_profile(order):
+        fd = FakeDispatcher()
+        sched = BatchScheduler(medium_static_graph, dispatcher=fd)
+        sched.run(order)
+        return sorted((c.engine, c.n_real,
+                       tuple(sorted(fake_count(q) for q in c.queries)))
+                      for c in fd.calls)
+
+    assert dispatch_profile(wl) == dispatch_profile([wl[i] for i in perm])
+
+
+@settings(max_examples=25, deadline=None)
+@given(deadlines=st.lists(st.floats(0.1, 100.0), min_size=2, max_size=6),
+       data=st.data())
+def test_edf_dispatch_order_property(medium_static_graph, deadlines, data):
+    """Whatever deadlines the queries carry and whatever order they arrive,
+    dispatches leave in nondecreasing group-deadline order."""
+    pool = _pool(medium_static_graph)
+    picks = data.draw(st.lists(
+        st.tuples(st.sampled_from(TEMPLATES),
+                  st.integers(0, POOL_PER_TEMPLATE - 1)),
+        min_size=len(deadlines), max_size=len(deadlines)))
+    sched = BatchScheduler(medium_static_graph, dispatcher=FakeDispatcher())
+    for (t, i), dl in zip(picks, deadlines):
+        sched.submit(pool[t][i], deadline_s=dl, now=0.0)
+    res = sched.flush()
+    assert len(res) == len(deadlines)
+    disp_deadlines = [d.deadline for d in sched.last_dispatches]
+    assert disp_deadlines == sorted(disp_deadlines)
