@@ -34,6 +34,9 @@ BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
 #   min_frac  fresh >= tol * baseline   (ratios/efficiencies: gate the drop)
 #   max_rise  fresh <= tol * baseline   (costs: gate the rise)
 #   exact     fresh == baseline         (structural invariants)
+#   max_abs   fresh <= tol              (absolute, baseline-free: overhead
+#                                        ratios whose acceptable value is a
+#                                        constant, not a host-dependent one)
 CHECKS = [
     # ---- serving: the batching win and its distributed leg.  The ratio
     # bands are wide (0.5) because the sequential denominator swings with
@@ -72,6 +75,13 @@ CHECKS = [
     ("BENCH_serving.json", "slo.closed.max_batch", "exact", 0),
     ("BENCH_serving.json", "slo.closed.n_dispatches", "exact", 0),
     ("BENCH_serving.json", "slo.closed.completion_rate", "min_frac", 0.95),
+    # ---- observability: the flight recorder must stay off the hot path.
+    # Both are absolute gates (the acceptable ceiling is a constant): traced
+    # dispatch time within 5% of untraced, and the disabled NullTracer
+    # path's analytic bound within 1%.  Bit-identity of traced results is
+    # asserted inside benchmarks/serving.py itself.
+    ("BENCH_serving.json", "obs.traced_overhead", "max_abs", 1.05),
+    ("BENCH_serving.json", "obs.null_overhead", "max_abs", 1.01),
     # ---- fused hop kernel vs materialize+segment_sum: the per-impl hop
     # timings.  Structural edge counts exact (same seed → same graph); the
     # speedup ratios in a band (benchmarks/serving.py separately enforces
@@ -131,7 +141,10 @@ def check_artifact(fresh_path: str, base_path: str, checks) -> list:
     for _, path, kind, tol in checks:
         try:
             f_vals = _resolve(fresh, path)
-            b_vals = _resolve(base, path)
+            # max_abs is baseline-free: an older committed baseline need not
+            # carry the key at all
+            b_vals = ([None] * len(f_vals) if kind == "max_abs"
+                      else _resolve(base, path))
         except (KeyError, IndexError, TypeError) as e:
             failures.append((path, kind, f"unresolvable: {e!r}"))
             continue
@@ -147,6 +160,8 @@ def check_artifact(fresh_path: str, base_path: str, checks) -> list:
                 ok, want = fv >= tol * bv, f">= {tol:g}·{bv:.4g}"
             elif kind == "max_rise":
                 ok, want = fv <= tol * bv, f"<= {tol:g}·{bv:.4g}"
+            elif kind == "max_abs":
+                ok, want = fv <= tol, f"<= {tol:g} (absolute)"
             else:
                 raise ValueError(kind)
             status = "ok  " if ok else "FAIL"
@@ -154,7 +169,9 @@ def check_artifact(fresh_path: str, base_path: str, checks) -> list:
                   if isinstance(fv, float) else
                   f"  [{status}] {tag}: {fv} (want {want})")
             if not ok:
-                failures.append((tag, kind, f"{fv} vs baseline {bv}"))
+                ref = f"absolute ceiling {tol:g}" if kind == "max_abs" \
+                    else f"baseline {bv}"
+                failures.append((tag, kind, f"{fv} vs {ref}"))
     return failures
 
 

@@ -12,6 +12,9 @@
 #                admission control, online θ refit, and both replay modes on
 #                the FakeDispatcher virtual clock (tier-1 also runs these;
 #                the dedicated leg keeps the SLO surface visible in the gate)
+#   obs          the query flight recorder (`-m obs`): span trees pinned on
+#                the virtual clock, metrics exposition, the cost-model audit
+#                replayed from trace JSONL, traced-vs-untraced bit-identity
 #   conformance  the four-way differential matrix at CONFORMANCE_SCALE=ci
 #                (full worker sweep + all ETR operators + the pallas impl
 #                axis), selected with `-m conformance` — tier-1 already runs
@@ -37,6 +40,8 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m pytest -m kernels -x -q
   echo "== serving SLO: deadlines/EDF, admission, online refit, replay (-m serving) =="
   python -m pytest -m serving -x -q
+  echo "== obs: flight recorder spans, metrics, cost-model audit (-m obs) =="
+  python -m pytest -m obs -x -q
   echo "== conformance: four-way differential matrix at CI scale (-m conformance) =="
   CONFORMANCE_SCALE=ci python -m pytest -m conformance -x -q
   echo "== multidevice: shard_map serving vs vmap simulation on 8 forced devices =="

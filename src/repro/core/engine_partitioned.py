@@ -566,23 +566,34 @@ def count_results(graph, qry, **kw) -> float:
     return float(t.sum()) if t.ndim else float(t)
 
 
-def query_exchange_volumes(qry: Q.PathQuery, arrays) -> Dict[str, int]:
-    """Structural per-query boundary volume per channel on the p2p lanes —
-    the CANONICAL statement of what each hop exchanges (benchmarks and tests
-    import this; the planner's ``estimate_segment`` m_net term applies the
-    same rule per step).  Mirrors the plan skeleton: aggregates run the
-    reversed segment, MIN/MAX ride the extremum channel on every plain hop,
-    ETR hops ship only the boundary rank summaries."""
-    state = extremum = etr = 0
+def hop_exchange_channels(qry: Q.PathQuery, arrays) -> List[Dict[str, int]]:
+    """Structural per-HOP boundary volume per channel on the p2p lanes —
+    the CANONICAL statement of what each hop exchanges (the flight
+    recorder's per-hop exchange spans report exactly these rows; the
+    planner's ``estimate_segment`` channels/m_net terms apply the same rule
+    per step).  Mirrors the plan skeleton: aggregates run the reversed
+    segment, MIN/MAX ride the extremum channel on every plain hop, ETR hops
+    ship only the boundary rank summaries."""
     minmax = qry.agg_op in (Q.AGG_MIN, Q.AGG_MAX)
+    rows = []
     for ep in qry.e_preds:
         if ep.etr_op != -1:
-            etr += arrays.etr_exchange_volume()
+            rows.append(dict(state=0, extremum=0,
+                             etr=int(arrays.etr_exchange_volume())))
         else:
-            state += arrays.exchange_volume()
-            if minmax:
-                extremum += arrays.exchange_volume()
-    return dict(state=state, extremum=extremum, etr=etr)
+            v = int(arrays.exchange_volume())
+            rows.append(dict(state=v, extremum=v if minmax else 0, etr=0))
+    return rows
+
+
+def query_exchange_volumes(qry: Q.PathQuery, arrays) -> Dict[str, int]:
+    """Whole-query boundary volume per channel: the sum of
+    ``hop_exchange_channels`` over the query's hops."""
+    totals = dict(state=0, extremum=0, etr=0)
+    for row in hop_exchange_channels(qry, arrays):
+        for ch, v in row.items():
+            totals[ch] += v
+    return totals
 
 
 def batch_executable(
@@ -875,8 +886,15 @@ def measure_supersteps(
     parts_per_type: Optional[int] = None,
     repeats: int = 2,
     impl: str = "xla",
+    tracer=None,
 ) -> SuperstepProfile:
     """Measured (not modelled) per-worker superstep times.
+
+    ``tracer`` (an ``obs.trace.Tracer``; None/NULL_TRACER = off) records the
+    profile as a span tree — measure_supersteps → superstep (per hop, with
+    the per-worker measured times) → exchange (per-channel boundary
+    volumes) — the same schema the serving flight recorder emits, so
+    trace_report renders profiler runs and served queries alike.
 
     ``impl`` selects the timed local-hop lowering (the xla-vs-pallas hop
     timings benchmarks/weak_scaling reports): ``'pallas'`` times the fused
@@ -1035,5 +1053,24 @@ def measure_supersteps(
     total = np.asarray(fns["total_fn"](
         arrivals_w, pdev["own_ids"], vmf,
         nul if vvf is None else vvf, bedges))
-    return SuperstepProfile(times, channels.sum(axis=1), channels,
-                            float(total.sum()))
+    profile = SuperstepProfile(times, channels.sum(axis=1), channels,
+                               float(total.sum()))
+    if tracer is not None and getattr(tracer, "enabled", False):
+        root = tracer.start("measure_supersteps", n_workers=W,
+                            n_hops=n_hops, impl=impl, mode=mode,
+                            backward=backward)
+        for i in range(n_hops):
+            ss = tracer.start(
+                "superstep", parent=root, hop=i,
+                measured_ms=float(times[i].max() * 1e3),
+                per_worker_ms=[float(t * 1e3) for t in times[i]],
+                etr=bool(e_preds[i].etr_op != -1))
+            ex = tracer.start("exchange", parent=ss, hop=i,
+                              state=int(channels[i, 0]),
+                              extremum=int(channels[i, 1]),
+                              etr=int(channels[i, 2]))
+            tracer.end(ex)
+            tracer.end(ss)
+        tracer.end(root, total=profile.total,
+                   balance_eff=profile.balance_eff)
+    return profile

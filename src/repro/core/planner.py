@@ -135,6 +135,12 @@ class StepEstimate:
     m_net: float = 0.0  # estimated cross-partition boundary messages
     #: feature row over the COEFF_KEYS basis (t_ms == features @ θ)
     features: Optional[np.ndarray] = None
+    #: per-channel breakdown of m_net — (state, extremum, etr) structural
+    #: boundary volumes of THIS hop (engine_partitioned.CHANNELS order; sums
+    #: to m_net).  None on terminal (vertex-only) steps, so ``channels is
+    #: not None`` identifies the hop steps a trace's superstep/exchange
+    #: spans mirror.
+    channels: Optional[Tuple[float, float, float]] = None
 
 
 @dataclasses.dataclass
@@ -146,6 +152,13 @@ class PlanEstimate:
     #: summed step features over COEFF_KEYS (t_ms == features @ coeff_vector);
     #: for estimate_batch, the batch-summed features
     features: Optional[np.ndarray] = None
+    #: the full sweep choose()/choose_batch() ran to pick this plan: one
+    #: dict(split, impl, t_ms, features) per candidate.  The flight
+    #: recorder's plan span records these so obs/audit.plan_accuracy can
+    #: re-cost the whole sweep under a trace-refit θ̂ offline (the paper's
+    #: "% within X% of optimal plan" metric).  None when no sweep ran
+    #: (direct estimate(), or use_planner=False).
+    candidates: Optional[List[dict]] = None
 
 
 def _clause_freq(stats: GraphStats, clauses: Sequence[Q.Clause], ent_type: int,
@@ -242,12 +255,16 @@ def estimate_segment(
         # point-to-point exchange actually moves (and what the per-channel
         # θ_net coefficients were fitted on) — ETR hops ship only the
         # boundary rank summaries of cut segments (see engine_partitioned)
-        m_net = 0.0
         if w > 1:
             if ep.etr_op != -1:
-                m_net = etr_exchange_volume
+                channels = (0.0, 0.0, float(etr_exchange_volume))
             else:
-                m_net = exchange_volume * (2.0 if extremum_channel else 1.0)
+                channels = (float(exchange_volume),
+                            float(exchange_volume) if extremum_channel
+                            else 0.0, 0.0)
+        else:
+            channels = (0.0, 0.0, 0.0)
+        m_net = sum(channels)
         # the superstep cost as a feature row over the COEFF_KEYS basis —
         # t is the dot product with θ, so the serving telemetry can refit θ
         # against measured dispatch times on exactly these columns
@@ -272,7 +289,8 @@ def estimate_segment(
         feat[_CK["theta_m"]] = max(m_e, 0.0) / w
         t = float(feat @ theta)
         steps.append(StepEstimate(a_v, f_v, m_v, a_e, f_e, m_e, t, V_sigma, e_slice,
-                                  ep.etr_op != -1, m_net, features=feat))
+                                  ep.etr_op != -1, m_net, features=feat,
+                                  channels=channels))
         prev_m_e = max(m_e, 0.0)
     return steps
 
@@ -350,13 +368,18 @@ class Planner:
         the xla lowering (the historical behaviour); pass
         ``impls=HOP_IMPL_CHOICES`` to let the fitted per-impl θ_scatter term
         route hops onto the fused kernel where it wins — ties break toward
-        the first entry (xla)."""
+        the first entry (xla).  The swept candidates are recorded on the
+        returned estimate (``candidates``) for the flight recorder."""
         best = None
+        cands: List[dict] = []
         for split in self.enumerate_plans(qry):
             for impl in impls:
                 est = self.estimate(qry, split, impl)
+                cands.append(dict(split=split, impl=impl, t_ms=est.t_ms,
+                                  features=est.features))
                 if best is None or est.t_ms < best.t_ms:
                     best = est
+        best.candidates = cands
         return best
 
     # ------------------------------------------------------- batched serving
@@ -392,11 +415,15 @@ class Planner:
             if q.shape_key() != shape0:
                 raise ValueError("batch planning needs same-shape queries")
         best = None
+        cands: List[dict] = []
         for split in self.enumerate_plans(queries[0]):
             for impl in impls:
                 est = self.estimate_batch(queries, split, impl)
+                cands.append(dict(split=split, impl=impl, t_ms=est.t_ms,
+                                  features=est.features))
                 if best is None or est.t_ms < best.t_ms:
                     best = est
+        best.candidates = cands
         return best
 
 

@@ -96,15 +96,18 @@ class GraniteServer:
         return out
 
     def run_workload_scheduled(self, workload: List[QueryInstance],
-                               engine: str = "auto", warm: bool = True):
+                               engine: str = "auto", warm: bool = True,
+                               tracer=None, metrics=None):
         """Serve the workload through the batch-scheduler runtime (one
         vmapped call per shape group, no fallbacks).  Returns
-        ``serving.ServedResult`` records in submission order."""
+        ``serving.ServedResult`` records in submission order.  ``tracer``/
+        ``metrics`` (repro.obs) attach the flight recorder."""
         from ..serving import BatchScheduler
         sched = BatchScheduler(self.graph, engine=engine, mode=self.mode,
                                n_buckets=self.n_buckets,
                                use_planner=self.use_planner,
-                               budget_s=self.budget_s)
+                               budget_s=self.budget_s,
+                               tracer=tracer, metrics=metrics)
         return sched.run(workload, warm=warm)
 
 
@@ -129,6 +132,12 @@ def main():
                     help="--replay arrival rate (queries/s)")
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "dense", "sliced", "partitioned"])
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record the query flight recorder to a trace JSONL "
+                         "(render with scripts/trace_report.py)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics registry at exit (.json = JSON "
+                         "snapshot, anything else = Prometheus text format)")
     args = ap.parse_args()
 
     params = LdbcParams(n_persons=args.persons, degree_dist=args.dist,
@@ -138,18 +147,38 @@ def main():
     server = GraniteServer(g, use_planner=not args.no_planner)
     wl = make_workload(g, n_per_template=args.queries, seed=args.seed)
 
+    tracer = metrics = None
+    if args.trace_out:
+        from ..obs import Tracer
+        tracer = Tracer(sink=args.trace_out)
+    if args.metrics_out:
+        from ..obs import MetricsRegistry
+        metrics = MetricsRegistry()
+
+    def _finish_obs():
+        if tracer is not None:
+            tracer.close()
+            print(f"trace: {tracer.n_completed} spans -> {args.trace_out}")
+        if metrics is not None:
+            metrics.write(args.metrics_out)
+            print(f"metrics -> {args.metrics_out}")
+
     if args.replay:
         from ..serving import BatchScheduler, replay_workload
         sched = BatchScheduler(g, engine=args.engine,
-                               use_planner=not args.no_planner)
+                               use_planner=not args.no_planner,
+                               tracer=tracer, metrics=metrics)
         rep = replay_workload(sched, wl, rate_qps=args.rate, seed=args.seed,
                               warm=True)
         for k, v in rep.as_dict().items():
             print(f"  {k}: {v}")
+        _finish_obs()
         return
 
     if args.serve:
-        recs = server.run_workload_scheduled(wl, engine=args.engine)
+        recs = server.run_workload_scheduled(wl, engine=args.engine,
+                                             tracer=tracer, metrics=metrics)
+        _finish_obs()
     else:
         recs = server.run_workload(wl, verbose=True)
     by_t = {}

@@ -79,6 +79,10 @@ class AdmissionDecision:
     impl: Optional[str] = None    # degradation overrides (None = scheduler
     engine: Optional[str] = None  # defaults)
     max_batch: Optional[int] = None
+    #: degradation-ladder rungs taken, in order (e.g. "impl=pallas",
+    #: "engine=sliced") — the flight recorder's admit-span and
+    #: admission-metric labels; empty for plain admits and rejects
+    rungs: Tuple[str, ...] = ()
 
     @property
     def admitted(self) -> bool:
@@ -168,12 +172,14 @@ class AdmissionController:
             deg_engine = "sliced"
             rungs.append("engine=sliced")
         if fits(best_ms):
+            if pol.degrade_max_batch is not None:
+                rungs.append(f"quantum={pol.degrade_max_batch}")
             self.n_degraded += 1
             self.backlog_ms += best_ms
             return AdmissionDecision(
                 DEGRADE, "degraded: " + ",".join(rungs), deadline,
                 best_ms / 1e3, wait_s, impl=deg_impl, engine=deg_engine,
-                max_batch=pol.degrade_max_batch)
+                max_batch=pol.degrade_max_batch, rungs=tuple(rungs))
 
         self.n_rejected += 1
         return AdmissionDecision(

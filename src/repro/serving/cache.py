@@ -86,13 +86,15 @@ def layout_signature(graph, engine: str, qry, n_workers: int,
 class CacheStats:
     hits: int = 0
     misses: int = 0
+    invalidations: int = 0   # whole-cache clears (online θ refits)
 
     @property
     def lookups(self) -> int:
         return self.hits + self.misses
 
     def as_dict(self) -> dict:
-        return dict(hits=self.hits, misses=self.misses)
+        return dict(hits=self.hits, misses=self.misses,
+                    invalidations=self.invalidations)
 
 
 class PlanCache:
@@ -122,8 +124,10 @@ class PlanCache:
     def clear(self) -> None:
         """Drop every cached plan (an online θ refit invalidates them: the
         best split may have moved).  Counters are kept — clears are part of
-        the serving history, not a reset of it."""
+        the serving history, not a reset of it (``invalidations`` counts
+        them)."""
         self._plans.clear()
+        self.stats.invalidations += 1
 
     def __len__(self) -> int:
         return len(self._plans)

@@ -124,6 +124,22 @@ def _finish_report(
     hit = done & (lat <= rel_deadline * 1e3)
     wall = float(t)
     n_rejected = sum(s == REJECTED for s in statuses)
+    if getattr(sched, "metrics", None) is not None:
+        mx = sched.metrics
+        slack = mx.histogram("granite_deadline_slack_ms",
+                             "per-completed-query slack vs its own deadline "
+                             "(ms; finite deadlines only)")
+        for i in range(n):
+            if done[i] and math.isfinite(rel_deadline[i]):
+                slack.observe(rel_deadline[i] * 1e3 - latencies[i])
+        status_ctr = mx.counter("granite_replay_total",
+                                "replayed queries by terminal status",
+                                labelnames=("status",))
+        for s in statuses:
+            status_ctr.inc(status=s)
+        mx.gauge("granite_goodput_qps",
+                 "deadline hits per second, last replay").set(
+            float(hit.sum()) / max(wall, 1e-12))
     return ReplayReport(
         n_queries=n,
         rate_qps=rate_qps,

@@ -60,6 +60,18 @@ The ``dispatcher`` hook swaps the JAX build-and-run step for an injected one
 (serving/testing.FakeDispatcher): all SLO control logic — grouping, EDF,
 chunking, admission, telemetry — is testable on a virtual clock with zero
 compilation.
+
+Observability (repro.obs): with a ``tracer`` attached every submitted query
+leaves one span tree — query → admit → plan → compile → dispatch →
+superstep (per hop) → exchange (per channel) — carrying the admission
+verdict/rungs, the plan's candidate sweep, cache hits, EDF position, and
+predicted-vs-measured ms at query, group, and hop granularity; a
+``metrics`` registry mirrors the counters (admission verdicts, cache
+events, refits, dispatch latency histogram, queue depth).  The default
+``NULL_TRACER`` makes the disabled path a no-op attribute lookup (overhead
+gated by benchmarks/serving.py + scripts/check_bench.py), and all timing
+flows through the injected ``clock``, so under the FakeDispatcher virtual
+clock the exact span tree is deterministic.
 """
 from __future__ import annotations
 
@@ -78,6 +90,7 @@ from ..core import query as Q
 from ..core.planner import HOP_IMPL_CHOICES, Planner, coeff_vector
 from ..core.stats import GraphStats
 from ..graphdata.queries import QueryInstance
+from ..obs.trace import NULL_TRACER
 from .admission import AdmissionController, AdmissionDecision, AdmissionPolicy
 from .cache import (ExecutableCache, PlanCache, graph_fingerprint,
                     layout_signature)
@@ -116,6 +129,7 @@ class QueueEntry:
     impl: Optional[str] = None   # admission-degradation overrides (None =
     engine: Optional[str] = None  # scheduler defaults)
     max_batch: Optional[int] = None
+    span: object = None          # root "query" span (flight recorder)
 
 
 @dataclasses.dataclass
@@ -155,6 +169,8 @@ class BatchScheduler:
         telemetry: Optional[TelemetryBuffer] = None,
         dispatcher=None,
         clock=time.perf_counter,
+        tracer=None,
+        metrics=None,
     ):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}")
@@ -194,6 +210,30 @@ class BatchScheduler:
         self._clock = clock
         self.n_rejected = 0
         self.n_degraded = 0
+        # ---- observability (tracer defaults to the no-op singleton)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        self._dispatch_seq = 0
+        # per-query PlanEstimate memo: features are θ-INDEPENDENT structural
+        # sums (GraphStats), so entries survive online refits — predictions
+        # are recomputed as features @ live θ at use time
+        self._est_memo: Dict[tuple, object] = {}
+        if metrics is not None:
+            self._mx_admission = metrics.counter(
+                "granite_admission_total", "admission outcomes",
+                labelnames=("verdict", "rung"))
+            self._mx_queue = metrics.gauge(
+                "granite_queue_depth", "entries queued for the next flush")
+            self._mx_dispatch_ms = metrics.histogram(
+                "granite_dispatch_ms",
+                "measured wall time per group dispatch (ms)")
+            self._mx_dispatched = metrics.counter(
+                "granite_dispatched_total", "real queries dispatched")
+            self._mx_cache = metrics.counter(
+                "granite_cache_total", "serving cache events",
+                labelnames=("cache", "event"))
+            self._mx_refit = metrics.counter(
+                "granite_refit_total", "online θ refits applied")
 
     # ------------------------------------------------------------ admission
     def submit(self, inst: Union[QueryInstance, Q.PathQuery],
@@ -209,18 +249,41 @@ class BatchScheduler:
         if now is None:
             now = self._clock() if (deadline_s is not None
                                     or self.admission is not None) else 0.0
+        tr = self.tracer
+        root = tr.start("query", template=inst.template,
+                        n_vertices=inst.qry.n_vertices,
+                        deadline_s=deadline_s)
         if self.admission is not None:
+            adm = tr.start("admit", parent=root)
             dec = self.admission.decide(self, inst, now, deadline_s)
+            tr.end(adm, verdict=dec.action, rungs=list(dec.rungs),
+                   reason=dec.reason, predicted_s=dec.predicted_s,
+                   predicted_wait_s=dec.predicted_wait_s)
+            if self.metrics is not None:
+                self._mx_admission.inc(verdict=dec.action,
+                                       rung=",".join(dec.rungs))
             if not dec.admitted:
                 self.n_rejected += 1
+                tr.end(root, status="rejected")
                 return dec
             if dec.action == "degrade":
                 self.n_degraded += 1
             self._queue.append(QueueEntry(inst, dec.deadline, now, dec.impl,
-                                          dec.engine, dec.max_batch))
+                                          dec.engine, dec.max_batch,
+                                          span=root))
+            if self.metrics is not None:
+                self._mx_queue.set(len(self._queue))
             return dec
+        if tr.enabled:
+            adm = tr.start("admit", parent=root)
+            tr.end(adm, verdict="admit", rungs=[],
+                   reason="no admission controller")
+        if self.metrics is not None:
+            self._mx_admission.inc(verdict="admit", rung="")
         deadline = math.inf if deadline_s is None else now + float(deadline_s)
-        self._queue.append(QueueEntry(inst, deadline, now))
+        self._queue.append(QueueEntry(inst, deadline, now, span=root))
+        if self.metrics is not None:
+            self._mx_queue.set(len(self._queue))
         return None
 
     @property
@@ -260,25 +323,28 @@ class BatchScheduler:
     def _plan_group(self, queries: List[Q.PathQuery], bucket: tuple,
                     mode: int, engine: str,
                     impl_override: Optional[str] = None):
-        """(split, hop impl, plan_cached) for one group.  A fixed ``impl``
-        (the scheduler's, or a per-group admission-degradation override)
-        pins the lowering and the planner only picks the split; ``'auto'``
-        sweeps (split × impl) with the fitted per-impl θ_scatter slopes."""
+        """(split, hop impl, plan_cached, candidates) for one group.  A
+        fixed ``impl`` (the scheduler's, or a per-group admission-
+        degradation override) pins the lowering and the planner only picks
+        the split; ``'auto'`` sweeps (split × impl) with the fitted per-impl
+        θ_scatter slopes.  ``candidates`` is the fresh sweep's candidate
+        list (None on a cache hit or without the planner) — the plan span's
+        audit payload."""
         qry = queries[0]
         default = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1
         impl_choice = impl_override or self.impl
         fixed_impl = None if impl_choice == "auto" else impl_choice
         if not self.use_planner:
-            return default, fixed_impl or "xla", True
+            return default, fixed_impl or "xla", True, None
         key = self._plan_key(bucket, mode, engine, impl_choice)
         plan = self.plan_cache.get(key)
         if plan is not None:
-            return plan[0], plan[1], True
+            return plan[0], plan[1], True, None
         impls = HOP_IMPL_CHOICES if fixed_impl is None else (fixed_impl,)
         est = self._planner_for(engine).choose_batch(queries, impls=impls)
         split, impl = est.split, fixed_impl or est.impl
         self.plan_cache.put(key, (split, impl))
-        return split, impl, False
+        return split, impl, False, est.candidates
 
     # ------------------------------------------------------------- dispatch
     def _build_executable(self, qry: Q.PathQuery, split: int, mode: int,
@@ -313,23 +379,51 @@ class BatchScheduler:
             # stays out of latency (a cache-hit executable has already
             # been traced and run at this key)
             jax.block_until_ready(run(pt.params).total)
-        t0 = time.perf_counter()
+        # timing goes through the INJECTED clock (default time.perf_counter)
+        # so dispatch durations — and with them telemetry rows and trace
+        # spans — are deterministic under a test-injected step clock
+        t0 = self._clock()
         res = run(pt.params)
         jax.block_until_ready(res.total)
-        return res, time.perf_counter() - t0, exec_cached
+        return res, self._clock() - t0, exec_cached
 
-    def _record_telemetry(self, queries: List[Q.PathQuery], split: int,
-                          engine: str, impl: str, pt, dt: float) -> float:
+    def _estimate_query(self, qry: Q.PathQuery, split: int, engine: str,
+                        impl: str):
+        """Memoised per-query PlanEstimate at a concrete (split, impl).
+
+        Safe across refits: the estimate's FEATURES are θ-independent
+        structural sums, and every prediction derived from a memo hit is
+        recomputed as ``features @ live θ`` — only the stale ``t_ms`` on
+        the cached object must not be read directly."""
+        key = (Q.query_params(qry).tobytes(), qry.shape_key(), split,
+               engine, impl)
+        est = self._est_memo.get(key)
+        if est is None:
+            est = self._planner_for(engine).estimate(qry, split, impl)
+            self._est_memo[key] = est
+        return est
+
+    def _group_features(self, queries: List[Q.PathQuery], split: int,
+                        engine: str, impl: str, pt):
+        """(batch-summed feature row, per-query estimates) for one dispatch
+        — the same sums ``Planner.estimate_batch`` produces (identical
+        np.sum reduction, so telemetry rows are bit-identical to the
+        un-memoised path)."""
+        ests = [self._estimate_query(q, split, engine, impl)
+                for q in queries]
+        feats = np.sum([e.features for e in ests], axis=0)
+        if pt.n_pad:
+            # padded rows run too: they repeat instance 0's parameters
+            feats = feats + pt.n_pad * ests[0].features
+        return feats, ests
+
+    def _record_telemetry(self, feats: np.ndarray, engine: str,
+                          dt: float) -> float:
         """One (features, predicted, measured) telemetry row per timed
         dispatch; periodic online θ refit updates the live planners (and
         clears the plan cache once, so stale split choices re-plan against
         the new coefficients)."""
         planner = self._planner_for(engine)
-        feats = planner.estimate_batch(queries, split, impl=impl).features
-        if pt.n_pad:
-            # padded rows run too: they repeat instance 0's parameters
-            feats = feats + pt.n_pad * planner.estimate(
-                queries[0], split, impl).features
         predicted_ms = float(feats @ coeff_vector(planner.coeffs))
         self.telemetry.record(feats, predicted_ms, dt * 1e3)
         if self.telemetry.should_refit():
@@ -338,7 +432,85 @@ class BatchScheduler:
             if self._planner_part is not None:
                 self._planner_part.coeffs.update(new)
             self.plan_cache.clear()
+            if self.metrics is not None:
+                self._mx_refit.inc()
+                self._mx_cache.inc(cache="plan", event="invalidation")
         return predicted_ms
+
+    def _trace_group(self, queue, idxs, ests, feats, split, engine, impl,
+                     pt, dt, plan_cached, exec_cached, candidates, seq,
+                     edf_pos, group_deadline, predicted_ms, out):
+        """Emit one dispatched group's span set: for EVERY member query a
+        plan → compile → dispatch → superstep (per hop) → exchange chain
+        under its root, so each query's tree is complete on its own.
+        Group-shared quantities (the telemetry row: batch-summed features,
+        group predicted/measured ms) repeat on each member's dispatch span
+        keyed by ``seq`` — obs/audit dedupes them back to one row per
+        dispatch.  Measured group time is apportioned to members (and to
+        hops within a member) by predicted fractions."""
+        tr = self.tracer
+        theta = coeff_vector(self._planner_for(engine).coeffs)
+        group_pred = (predicted_ms if self.telemetry is not None
+                      else float(feats @ theta))
+        cand_attrs = None
+        if candidates is not None:
+            cand_attrs = [dict(split=c["split"], impl=c["impl"],
+                               t_ms=float(c["t_ms"]),
+                               features=np.asarray(c["features"]).tolist())
+                          for c in candidates]
+        q_preds = [float(e.features @ theta) for e in ests]
+        pred_sum = sum(q_preds)
+        group_ms = dt * 1e3
+        key_repr = repr((engine, impl, split, pt.params.shape[0]))
+        for j, i in enumerate(idxs):
+            root = queue[i].span
+            est = ests[j]
+            plan_span = tr.start("plan", parent=root, seq=seq, split=split,
+                                 impl=impl, engine=engine,
+                                 plan_cached=plan_cached,
+                                 predicted_ms=q_preds[j],
+                                 features=est.features)
+            if cand_attrs is not None and j == 0:
+                # the candidate sweep is one decision per GROUP — record it
+                # once, on the first member's plan span (audit re-joins it
+                # to the other members by seq); repeating the full sweep on
+                # all members multiplies record volume ~batch-fold
+                tr.annotate(plan_span, candidates=cand_attrs)
+            tr.end(plan_span)
+            comp = tr.start("compile", parent=root, seq=seq,
+                            cache="hit" if exec_cached else "miss",
+                            key=key_repr)
+            tr.end(comp)
+            share = (q_preds[j] / pred_sum if pred_sum > 0
+                     else 1.0 / len(idxs))
+            q_meas = group_ms * share
+            disp = tr.start(
+                "dispatch", parent=root, seq=seq, batch=pt.n_real,
+                n_pad=pt.n_pad, edf_pos=edf_pos, engine=engine, impl=impl,
+                split=split,
+                deadline=(None if math.isinf(group_deadline)
+                          else group_deadline),
+                predicted_ms=q_preds[j], measured_ms=q_meas,
+                features=est.features, group_features=feats,
+                group_predicted_ms=group_pred, group_measured_ms=group_ms)
+            hop_steps = [s for s in est.steps if s.channels is not None]
+            hop_preds = [float(s.features @ theta) for s in hop_steps]
+            hp_sum = sum(hop_preds)
+            for h, s in enumerate(hop_steps):
+                hshare = (hop_preds[h] / hp_sum if hp_sum > 0
+                          else 1.0 / len(hop_steps))
+                ss = tr.start("superstep", parent=disp, hop=h, etr=s.etr,
+                              predicted_ms=hop_preds[h],
+                              measured_ms=q_meas * hshare)
+                ex = tr.start("exchange", parent=ss, hop=h,
+                              state=s.channels[0],
+                              extremum=s.channels[1], etr=s.channels[2])
+                tr.end(ex)
+                tr.end(ss)
+            tr.end(disp)
+            r = out[i]
+            tr.end(root, status="done", ok=r.ok, count=r.count,
+                   latency_ms=r.latency_ms)
 
     def flush(self, warm: bool = False) -> List[ServedResult]:
         """Drain the queue: one vmapped engine call per (bucket, mode,
@@ -350,6 +522,8 @@ class BatchScheduler:
         queue, self._queue = self._queue, []
         if self.admission is not None:
             self.admission.on_flush()
+        if self.metrics is not None:
+            self._mx_queue.set(0)
         if not queue:
             self.last_dispatches = []
             return []
@@ -380,12 +554,13 @@ class BatchScheduler:
 
         out: List[Optional[ServedResult]] = [None] * len(queue)
         dispatches: List[GroupDispatch] = []
-        for group_deadline, _, key, idxs in units:
+        traced_groups: List[tuple] = []
+        for edf_pos, (group_deadline, _, key, idxs) in enumerate(units):
             bucket, mode, engine, impl_over = key
             insts = [queue[i].inst for i in idxs]
             queries = [x.qry for x in insts]
             try:
-                split, impl, plan_cached = self._plan_group(
+                split, impl, plan_cached, candidates = self._plan_group(
                     queries, bucket, mode, engine, impl_override=impl_over)
                 pt = compile_plan_tensor(queries, pad=self.pad_batches)
                 if self.dispatcher is not None:
@@ -405,11 +580,25 @@ class BatchScheduler:
                         split=-1, count=-1.0, latency_ms=0.0, ok=False,
                         batch_size=len(idxs), error=str(e),
                         deadline=queue[i].deadline)
+                    self.tracer.end(queue[i].span, status="failed",
+                                    error=str(e))
                 continue
+            seq = self._dispatch_seq
+            self._dispatch_seq += 1
+            feats = ests = None
+            if self.telemetry is not None or self.tracer.enabled:
+                feats, ests = self._group_features(queries, split, engine,
+                                                   impl, pt)
             predicted_ms = 0.0
             if self.telemetry is not None:
-                predicted_ms = self._record_telemetry(queries, split, engine,
-                                                      impl, pt, dt)
+                predicted_ms = self._record_telemetry(feats, engine, dt)
+            if self.metrics is not None:
+                self._mx_dispatch_ms.observe(dt * 1e3)
+                self._mx_dispatched.inc(pt.n_real)
+                self._mx_cache.inc(cache="plan",
+                                   event="hit" if plan_cached else "miss")
+                self._mx_cache.inc(cache="executable",
+                                   event="hit" if exec_cached else "miss")
             per_query_ms = dt * 1e3 / pt.n_real
             ok = per_query_ms <= self.budget_s * 1e3
 
@@ -429,9 +618,20 @@ class BatchScheduler:
                             else None),
                     deadline=queue[i].deadline,
                 )
+            if self.tracer.enabled:
+                # span construction is DEFERRED to after the dispatch loop:
+                # building hundreds of record dicts between two ~ms timed
+                # JAX calls measurably pollutes the CPU caches the next
+                # dispatch runs on (the bench obs leg gates this at ≤5%)
+                traced_groups.append(
+                    (idxs, ests, feats, split, engine, impl, pt, dt,
+                     plan_cached, exec_cached, candidates, seq, edf_pos,
+                     group_deadline, predicted_ms))
             dispatches.append(GroupDispatch(
                 key, engine, split, pt.n_real, pt.n_pad, dt, list(idxs),
                 plan_cached, exec_cached, impl, group_deadline, predicted_ms))
+        for grp in traced_groups:
+            self._trace_group(queue, *grp, out)
         self.last_dispatches = dispatches
         self.n_dispatched += len(queue)
         return out  # type: ignore[return-value]

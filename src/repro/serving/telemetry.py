@@ -127,16 +127,23 @@ class TelemetryBuffer:
     def error_stats(self, tail: Optional[int] = None) -> dict:
         """Mean/p90 absolute relative prediction error — over the whole
         recorded trace and (``tail_*``) its final stretch, where the online
-        refit has had samples to learn from."""
+        refit has had samples to learn from.
+
+        Always returns a well-defined NaN-free dict: an empty buffer is all
+        zeros, ``tail`` is clamped to the recorded length (``tail=0`` means
+        an empty tail → 0.0, not whole-trace stats via ``e[-0:]``)."""
         if not self.errors:
             return dict(n=0, mean_abs_rel_err=0.0, p90_abs_rel_err=0.0,
                         tail_mean_abs_rel_err=0.0, n_refits=self.n_refits)
         e = np.asarray(self.errors)
-        k = tail if tail is not None else max(1, len(e) // 2)
+        if tail is None:
+            k = max(1, len(e) // 2)
+        else:
+            k = max(0, min(int(tail), len(e)))
         return dict(
             n=len(e),
             mean_abs_rel_err=float(e.mean()),
             p90_abs_rel_err=float(np.percentile(e, 90)),
-            tail_mean_abs_rel_err=float(e[-k:].mean()),
+            tail_mean_abs_rel_err=float(e[-k:].mean()) if k else 0.0,
             n_refits=self.n_refits,
         )

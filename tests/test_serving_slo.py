@@ -499,3 +499,70 @@ def test_flush_results_in_submission_order_any_permutation(
         if ref is None:
             ref = counts
         assert counts == ref                  # grouping permutation-invariant
+
+
+# -------------------------------------- telemetry error_stats edge cases
+def test_error_stats_empty_buffer_is_zeroed():
+    tb = TelemetryBuffer()
+    s = tb.error_stats()
+    assert s == dict(n=0, mean_abs_rel_err=0.0, p90_abs_rel_err=0.0,
+                     tail_mean_abs_rel_err=0.0, n_refits=0)
+
+
+def test_error_stats_tail_clamping():
+    tb = TelemetryBuffer(refit=False)
+    # predicted 1ms, measured 2ms → |1-2|/2 = 0.5 abs rel err per sample
+    for _ in range(3):
+        tb.record(np.ones(10), 1.0, 2.0)
+    full = tb.error_stats()
+    assert full["n"] == 3
+    assert full["mean_abs_rel_err"] == pytest.approx(0.5)
+    # tail longer than the buffer clamps to the whole buffer
+    assert tb.error_stats(tail=100) == tb.error_stats(tail=3)
+    # tail=0 means "no tail window", not "whole array"
+    assert tb.error_stats(tail=0)["tail_mean_abs_rel_err"] == 0.0
+    # a genuine tail sees only the newest samples
+    tb.record(np.ones(10), 1.0, 1.0)          # perfect prediction
+    assert tb.error_stats(tail=1)["tail_mean_abs_rel_err"] == 0.0
+    assert tb.error_stats(tail=2)["tail_mean_abs_rel_err"] == \
+        pytest.approx(0.25)
+
+
+# -------------------------------------- injected clock routing (dispatch)
+def test_fake_dispatch_duration_equals_service_model_exactly(
+        medium_static_graph):
+    """The recorded dispatch duration is the fake service model's value
+    EXACTLY — timing flows through the injected clock, not time.monotonic."""
+    wl = make_workload(medium_static_graph, templates=("Q2", "Q4"),
+                       n_per_template=3, seed=60)
+    fd = FakeDispatcher(
+        service_model=constant_service_model(2e-3, overhead_s=5e-3))
+    sched = BatchScheduler(medium_static_graph, dispatcher=fd)
+    res = sched.run(wl)
+    assert all(r.ok for r in res)
+    assert sched.last_dispatches
+    for d in sched.last_dispatches:
+        # padded batch = n_real + n_pad; == (not approx) — the duration IS
+        # the model's output, untouched by any wall clock
+        assert d.service_s == 5e-3 + 2e-3 * (d.n_real + d.n_pad)
+    # per-query latency is the group time apportioned — still exact algebra:
+    # every group's service time is fully distributed over its members
+    assert sum(r.latency_ms for r in res) == pytest.approx(
+        sum(d.service_s for d in sched.last_dispatches) * 1e3, rel=1e-9)
+
+
+def test_real_dispatch_duration_comes_from_injected_clock(
+        small_static_graph):
+    """Real JAX dispatch with a virtual clock on the scheduler: every
+    recorded duration is exactly one clock step — proof that _dispatch_jax
+    reads self._clock and never the wall clock."""
+    from repro.obs import StepClock
+
+    wl = make_workload(small_static_graph, templates=("Q2", "Q4"),
+                       n_per_template=2, seed=61)
+    sched = BatchScheduler(small_static_graph, clock=StepClock(step=0.125))
+    res = sched.run(wl, warm=True)
+    assert all(r.ok for r in res)
+    assert sched.last_dispatches
+    for d in sched.last_dispatches:
+        assert d.service_s == 0.125                    # exact, not approx
