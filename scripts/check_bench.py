@@ -82,6 +82,18 @@ CHECKS = [
     # asserted inside benchmarks/serving.py itself.
     ("BENCH_serving.json", "obs.traced_overhead", "max_abs", 1.05),
     ("BENCH_serving.json", "obs.null_overhead", "max_abs", 1.01),
+    # ---- live-graph serving: epoch-pinned drains while ingesting.  The
+    # structural counters (epochs, compactions, delta dispatches, the
+    # bit-identity flag) are deterministic given the seeds and pinned
+    # exactly; the latency ratio is an absolute ceiling (its acceptable
+    # value is a constant — BENCH_ENFORCE inside benchmarks/serving.py
+    # applies the same 3x floor).
+    ("BENCH_serving.json", "ingest.latency_ratio", "max_abs", 3.0),
+    ("BENCH_serving.json", "ingest.frozen_identical", "exact", 0),
+    ("BENCH_serving.json", "ingest.n_epochs", "exact", 0),
+    ("BENCH_serving.json", "ingest.n_compactions", "exact", 0),
+    ("BENCH_serving.json", "ingest.delta_exec_dispatches", "exact", 0),
+    ("BENCH_serving.json", "ingest.completion_rate", "min_frac", 0.95),
     # ---- fused hop kernel vs materialize+segment_sum: the per-impl hop
     # timings.  Structural edge counts exact (same seed → same graph); the
     # speedup ratios in a band (benchmarks/serving.py separately enforces

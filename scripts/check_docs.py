@@ -1,0 +1,146 @@
+#!/usr/bin/env python
+"""Docs gate: every fenced command in README.md and docs/*.md must at least
+parse, the cheap ones must RUN, and every ``file:line`` anchor must point at
+a real line — so the documentation cannot silently rot as the code moves
+(scripts/ci.sh runs this as the ``docs`` leg).
+
+Three checks:
+
+  syntax   every ```bash fenced block goes through ``bash -n`` — a typo'd
+           flag continuation or unbalanced quote fails CI even when the
+           command is too expensive to execute;
+  run      blocks fenced as ```bash run additionally EXECUTE (bash -e,
+           repo root, PYTHONPATH=src) with a per-block timeout — the
+           convention marks the cheap, side-effect-free examples; anything
+           heavy (benches, the full CI gate) stays syntax-checked only;
+  anchors  every ``path/to/file.py:123`` reference must name an existing
+           repo file with at least that many lines.  Anchors are how
+           docs/architecture.md's lifecycle walkthrough stays honest: move
+           the code without updating the doc and this gate fails.
+
+Exit non-zero on any failure; `--list` prints what would be checked.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUN_TIMEOUT_S = 300
+
+FENCE_RE = re.compile(r"^```bash([ \t]+run)?[ \t]*\n(.*?)^```",
+                      re.MULTILINE | re.DOTALL)
+# path:line anchors: a repo-relative path ending in a known source suffix,
+# a colon, and a line number.  (Plain prose colons never match — the path
+# must contain a slash or be a top-level file with a source suffix.)
+ANCHOR_RE = re.compile(
+    r"`([A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|sh|md|ini|toml|json)):(\d+)`")
+
+
+def doc_files() -> list:
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        out += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                      if f.endswith(".md"))
+    return out
+
+
+def check_blocks(path: str, execute: bool) -> list:
+    failures = []
+    with open(path) as f:
+        text = f.read()
+    rel = os.path.relpath(path, REPO)
+    for i, m in enumerate(FENCE_RE.finditer(text)):
+        tag_run, body = bool(m.group(1)), m.group(2)
+        line = text[:m.start()].count("\n") + 1
+        tag = f"{rel}:{line} block#{i}"
+        syn = subprocess.run(["bash", "-n"], input=body, text=True,
+                             capture_output=True)
+        if syn.returncode != 0:
+            failures.append((tag, "syntax", syn.stderr.strip()))
+            print(f"  [FAIL] {tag}: bash -n: {syn.stderr.strip()}")
+            continue
+        if tag_run and execute:
+            env = dict(os.environ)
+            env["PYTHONPATH"] = ("src" + os.pathsep + env["PYTHONPATH"]
+                                 if env.get("PYTHONPATH") else "src")
+            try:
+                run = subprocess.run(["bash", "-e"], input=body, text=True,
+                                     capture_output=True, cwd=REPO, env=env,
+                                     timeout=RUN_TIMEOUT_S)
+            except subprocess.TimeoutExpired:
+                failures.append((tag, "run", f"timeout {RUN_TIMEOUT_S}s"))
+                print(f"  [FAIL] {tag}: run timed out")
+                continue
+            if run.returncode != 0:
+                tail = (run.stderr or run.stdout).strip().splitlines()[-5:]
+                failures.append((tag, "run", "; ".join(tail)))
+                print(f"  [FAIL] {tag}: exit {run.returncode}: "
+                      + " | ".join(tail))
+            else:
+                print(f"  [ok  ] {tag}: ran ({len(body.splitlines())} lines)")
+        else:
+            kind = "syntax-only (heavy)" if tag_run and not execute \
+                else "syntax"
+            print(f"  [ok  ] {tag}: {kind}")
+    return failures
+
+
+def check_anchors(path: str) -> list:
+    failures = []
+    with open(path) as f:
+        text = f.read()
+    rel = os.path.relpath(path, REPO)
+    for m in ANCHOR_RE.finditer(text):
+        target, line_no = m.group(1), int(m.group(2))
+        tag = f"{rel}: `{target}:{line_no}`"
+        full = os.path.join(REPO, target)
+        if not os.path.isfile(full):
+            failures.append((tag, "anchor", "file does not exist"))
+            print(f"  [FAIL] {tag}: file does not exist")
+            continue
+        with open(full) as f:
+            n_lines = sum(1 for _ in f)
+        if line_no < 1 or line_no > n_lines:
+            failures.append((tag, "anchor",
+                             f"line {line_no} > {n_lines} lines"))
+            print(f"  [FAIL] {tag}: line {line_no} out of range "
+                  f"(file has {n_lines})")
+        else:
+            print(f"  [ok  ] {tag}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-run", action="store_true",
+                    help="syntax-check the ```bash run blocks instead of "
+                    "executing them")
+    ap.add_argument("--list", action="store_true",
+                    help="print the files that would be checked and exit")
+    args = ap.parse_args()
+    files = doc_files()
+    if args.list:
+        for f in files:
+            print(os.path.relpath(f, REPO))
+        return 0
+    failures = []
+    for f in files:
+        print(f"{os.path.relpath(f, REPO)}:")
+        failures += check_blocks(f, execute=not args.no_run)
+        failures += check_anchors(f)
+    if failures:
+        print(f"\nDOCS GATE FAILED: {len(failures)} problem(s)")
+        for tag, kind, msg in failures:
+            print(f"  - {tag} [{kind}]: {msg}")
+        return 1
+    print("\nDOCS GATE PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,6 +15,13 @@
 #   obs          the query flight recorder (`-m obs`): span trees pinned on
 #                the virtual clock, metrics exposition, the cost-model audit
 #                replayed from trace JSONL, traced-vs-untraced bit-identity
+#   ingest       live-graph serving (`-m ingest`): event-log validation,
+#                incremental-vs-from-scratch materialization identity,
+#                replay order-insensitivity, delta execution, epoch-pinned
+#                cache metrics, and the conformance ingestion leg
+#   docs         scripts/check_docs.py: every fenced command in README.md +
+#                docs/*.md parses, the cheap ```bash run blocks execute,
+#                and every file:line anchor points at a real line
 #   conformance  the four-way differential matrix at CONFORMANCE_SCALE=ci
 #                (full worker sweep + all ETR operators + the pallas impl
 #                axis), selected with `-m conformance` — tier-1 already runs
@@ -42,6 +49,10 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m pytest -m serving -x -q
   echo "== obs: flight recorder spans, metrics, cost-model audit (-m obs) =="
   python -m pytest -m obs -x -q
+  echo "== ingest: live-graph serving — event log, epochs, delta exec (-m ingest) =="
+  python -m pytest -m ingest -x -q
+  echo "== docs: fenced commands + file:line anchors (scripts/check_docs.py) =="
+  python scripts/check_docs.py
   echo "== conformance: four-way differential matrix at CI scale (-m conformance) =="
   CONFORMANCE_SCALE=ci python -m pytest -m conformance -x -q
   echo "== multidevice: shard_map serving vs vmap simulation on 8 forced devices =="

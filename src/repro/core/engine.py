@@ -95,9 +95,18 @@ def run_segment(
     minmax_col=None,
     impl: str = "xla",
     layout=None,
+    delta=None,
 ) -> SegmentResult:
     """Run one path segment.  v_preds has one more entry than e_preds; the
     FINAL vertex predicate is NOT applied (it belongs to the join).
+
+    ``delta`` (a ``graphdata.ingest.DeltaSpec.device()`` dict) adds the
+    base+delta execution path: every plain hop also evaluates the edge
+    predicate over the delta-edge slots and merges their (unsorted)
+    delivery into the base arrivals — bit-identical to running on the
+    merged epoch graph, with the base graph's compiled layout untouched.
+    ETR hops read global rank tables and are delta-incompatible (callers
+    gate on query shape; ``batch_executable_delta`` refuses them).
 
     ``impl``/``layout`` select the delivery lowering: with a
     ``kernels.hop_scatter.HopLayout`` over the graph's arrival-sorted
@@ -143,6 +152,9 @@ def run_segment(
                 v_preds[i].clauses, params, pbases_v[i], mode, bedges,
             )
         if ep.etr_op != -1:
+            if delta is not None:
+                raise NotImplementedError(
+                    "delta execution across ETR hops (global rank tables)")
             # ETR hop: prefix-sum over *raw* previous arrivals, then apply the
             # intermediate vertex predicate at the source gather.
             src_cnt = SS.etr_weighted(gdev, prev_raw_e, ep.etr_op, backward,
@@ -166,6 +178,13 @@ def run_segment(
         prev_raw_e = cnt_e
         if with_minmax and ep.etr_op != -1:
             raise NotImplementedError("min/max aggregation across ETR hops")
+        d_add = d_mm = None
+        if delta is not None:
+            # delta-segment contribution, from the SAME pre-hop source state
+            # and extremum channel the base delivery reads
+            d_add, d_mm = SS.delta_hop_deliver(
+                delta, ep, sv, params, pbases_e[i], mode, V,
+                mch=(mch_v if with_minmax else None), minmax_op=minmax_op)
         if fused and ep.etr_op == -1:
             # fused kernel hop: arrivals (and the extremum channel) come from
             # ONE VMEM pass over the state table — cnt_e above stays traced
@@ -184,6 +203,11 @@ def run_segment(
                                      mode)
                 mch_v = SS.deliver_extremum(m_e, gdev["t_dst"], V, minmax_op,
                                             impl=impl, layout=layout)
+        if d_add is not None:
+            arrivals_v = arrivals_v + d_add
+            if with_minmax:
+                comb = jnp.minimum if minmax_op == Q.AGG_MIN else jnp.maximum
+                mch_v = comb(mch_v, d_mm)
         stat = dict(phase=f"hop{i}", matched_edges=jnp.sum(wmask))
         if not fused:
             # per-edge activity would force the materialisation the fused
@@ -218,18 +242,21 @@ def execute_plan_traced(
     segment_runner=None,
     impl: str = "xla",
     layout=None,
+    delta=None,
 ):
     """Traceable plan execution.  All query structure is Python-static.
 
     ``segment_runner`` (defaults to the dense ``run_segment``) lets other
     executors reuse the split/join skeleton: it must return a SegmentResult
     whose arrivals live in GLOBAL vertex/traversal-edge space.
-    ``impl``/``layout`` only parameterise the DEFAULT dense runner — other
-    executors thread their own delivery lowering through their runner.
+    ``impl``/``layout``/``delta`` only parameterise the DEFAULT dense
+    runner — other executors thread their own delivery lowering through
+    their runner.
     """
     with SS.bucket_scope(bedges):
         return _execute_plan_inner(gdev, qry, split, mode, n_buckets, params,
-                                   segment_runner, impl=impl, layout=layout)
+                                   segment_runner, impl=impl, layout=layout,
+                                   delta=delta)
 
 
 def _pbases(qry: Q.PathQuery):
@@ -246,7 +273,8 @@ def _pbases(qry: Q.PathQuery):
 
 
 def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params,
-                        segment_runner=None, impl: str = "xla", layout=None):
+                        segment_runner=None, impl: str = "xla", layout=None,
+                        delta=None):
     n = qry.n_vertices
     assert 0 <= split < n
     pv, pe = _pbases(qry)
@@ -254,7 +282,8 @@ def _execute_plan_inner(gdev, qry, split, mode, n_buckets, params,
     runner = segment_runner
     if runner is None:
         def runner(*a, **kw):
-            return run_segment(gdev, *a, impl=impl, layout=layout, **kw)
+            return run_segment(gdev, *a, impl=impl, layout=layout,
+                               delta=delta, **kw)
 
     want_agg = qry.agg_op != Q.AGG_NONE
     want_minmax = qry.agg_op in (Q.AGG_MIN, Q.AGG_MAX)
@@ -557,6 +586,62 @@ def batch_executable(
             full = jnp.zeros((per_vertex.shape[0], V) + per_vertex.shape[2:],
                              per_vertex.dtype)
             per_vertex = full.at[:, lo:hi].set(per_vertex)
+        return ExecOutput(total, per_vertex, minmax, [])
+
+    return run
+
+
+def batch_executable_delta(
+    graph: TemporalGraph,
+    qry: Q.PathQuery,
+    split: Optional[int] = None,
+    mode: int = MODE_STATIC,
+    n_buckets: int = 16,
+    impl: str = "xla",
+):
+    """Base+delta twin of ``batch_executable`` for live-graph serving.
+
+    ``graph`` is the COMPACTED BASE; the returned ``run(params, delta)``
+    additionally takes a ``graphdata.ingest.DeltaSpec.device()`` dict and
+    answers as if the delta edges were part of the graph — bit-identical to
+    ``batch_executable`` on the merged epoch graph (tests/test_ingest.py).
+
+    The jit cache key deliberately EXCLUDES the delta: one cached callable
+    serves every epoch of a compaction window, retracing only when the
+    delta outgrows its pow-2 padded capacity.  That is the executable-cache
+    half of delta-aware invalidation — epochs that only append edges keep
+    every compiled executable warm.
+
+    ETR hops read whole-graph rank tables, so queries containing them are
+    refused (the scheduler serves those from the merged epoch graph).
+    """
+    if any(e.etr_op != -1 for e in qry.e_preds):
+        raise ValueError("ETR hops need global rank tables — not delta-"
+                         "executable; serve from the merged epoch graph")
+    if split is None:
+        split = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1
+    gdev = _prepare_gdev(graph)
+    bedges = jnp.asarray(
+        iv.bucket_edges(graph.lifespan[0], graph.lifespan[1], n_buckets)
+    )
+    key = ("batch_delta", id(graph), qry.shape_key(), split, mode, n_buckets,
+           SS.check_impl(impl))
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        layout = hop_layout_for(graph) if SS.use_pallas(impl) else None
+
+        def one(gd, params, be, delta):
+            out = execute_plan_traced(gd, qry, split, mode, n_buckets,
+                                      params, be, impl=impl, layout=layout,
+                                      delta=delta)
+            return out.total, out.per_vertex, out.minmax
+
+        fn = jax.jit(jax.vmap(one, in_axes=(None, 0, None, None)))
+        _JIT_CACHE[key] = fn
+
+    def run(params, delta) -> ExecOutput:
+        total, per_vertex, minmax = fn(gdev, jnp.asarray(params), bedges,
+                                       delta)
         return ExecOutput(total, per_vertex, minmax, [])
 
     return run

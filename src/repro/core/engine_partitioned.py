@@ -466,7 +466,16 @@ def partition_for(graph: TemporalGraph, n_workers: int,
     key = (n_workers, ppt)
     hit = cache.get(key)
     if hit is None:
-        part = partition_graph(graph, n_workers=n_workers, parts_per_type=ppt)
+        # an ingestion epoch attaches a partition hint (graphdata/ingest.py)
+        # that extends the BASE graph's cached partitioning over the delta
+        # instead of re-running BFS growth; None → fresh partition
+        part = None
+        hint = getattr(graph, "_partition_hint", None)
+        if hint is not None:
+            part = hint(n_workers, ppt)
+        if part is None:
+            part = partition_graph(graph, n_workers=n_workers,
+                                   parts_per_type=ppt)
         arrays = build_partition_arrays(graph, part)
         hit = (part, arrays, _prepare_pdev(arrays))
         cache[key] = hit

@@ -577,6 +577,41 @@ def deliver_extremum(m_e, seg_ids, num_segments: int, op: int,
 
 
 # =========================================================================
+# delta-segment delivery (base-CSR + delta execution, graphdata/ingest.py)
+# =========================================================================
+def delta_hop_deliver(delta, ep, sv, params, pbase, mode: int, V: int,
+                      mch=None, minmax_op=Q.AGG_MIN):
+    """One hop's arrival contribution from a padded delta-edge segment.
+
+    ``delta`` is a ``DeltaSpec.device()`` dict shaped like a tiny unsorted
+    gdev (t_src/t_dst/t_life/t_type/t_isfwd/eprops_t over 2·capacity slots
+    plus a ``valid`` mask killing the padding).  The hop's edge predicate is
+    evaluated over the delta slots exactly as over base traversal edges, the
+    per-edge counts are delivered with an UNSORTED segment-sum (delta edges
+    are in appended order, not arrival order), and the extremum channel
+    rides along when ``mch`` is given.  Because counts are exact small
+    integers in float32, base-sum + delta-sum equals the merged graph's
+    single sorted sum bit-for-bit — the invariant that makes the base+delta
+    executable interchangeable with a from-scratch epoch build.
+
+    Returns (arrival counts [V, *TS], extremum [V] | None) to be combined
+    into the base hop's delivery (add / min-max respectively).
+    """
+    bedges = current_bedges()
+    wmask, evalid = edge_predicate_weights(delta, ep, params, pbase, mode,
+                                           bedges)
+    wmask = wmask & delta["valid"]
+    cnt = apply_edge(sv[delta["t_src"]], wmask, evalid, mode)
+    add = deliver(cnt, delta["t_dst"], V, indices_are_sorted=False)
+    mm = None
+    if mch is not None:
+        m_e = minmax_edge(mch[delta["t_src"]], cnt, minmax_op, mode)
+        mm = deliver_extremum(m_e, delta["t_dst"], V, minmax_op,
+                              indices_are_sorted=False)
+    return add, mm
+
+
+# =========================================================================
 # ETR prefix machinery
 # =========================================================================
 def etr_weighted(gdev, cnt_e_prev, op: int, backward: bool, use_arr: bool):

@@ -1,1 +1,3 @@
 from .loader import GraphBuilder, load_graph, save_graph  # noqa: F401
+from .ingest import (DeltaSpec, Event, EventLog, Materializer,  # noqa: F401
+                     events_fingerprint, log_from_graph, materialize)

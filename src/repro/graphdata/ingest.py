@@ -1,0 +1,761 @@
+"""Streaming ingestion: append-only temporal event log + canonical replay.
+
+Every structure downstream of this module — sorted-CSR traversal layouts,
+partition tables, serving-cache fingerprints — assumes a frozen graph.  This
+module is the boundary that makes "frozen" a *per-epoch* notion instead of a
+forever one (ROADMAP item 1; the snapshot/delta storage split of "Storing and
+Querying Evolving Graphs in NoSQL Storage Models"):
+
+  EventLog      append-only log of temporal events (vertex/edge add, property
+                set, interval close) with external integer keys.  ``seal()``
+                freezes the current suffix as one **epoch**; sealed prefixes
+                are immutable forever.
+  materialize   from-scratch canonical replay of the first k epochs into a
+                TemporalGraph — the reference semantics.  The canonical
+                orders are chosen so that (a) replay is insensitive to event
+                order within an epoch and (b) every epoch's arrays are an
+                *extension* of the previous epoch's (append-friendly).
+  Materializer  the incremental path: applies one sealed epoch to the
+                previous epoch's graph with a monotone gid remap, a
+                searchsorted merge of new traversal entries into the
+                arrival-sorted order (no O(E log E) re-lexsort), and
+                copy-on-write property columns — **bit-identical** to
+                ``materialize`` (pinned by tests/test_ingest.py).
+  DeltaSpec     padded device arrays for the base-CSR + delta-segment
+                execution path (``engine.batch_executable_delta``): when the
+                window since the last compaction is pure edge-appends, the
+                serving scheduler keeps dispatching the *base* graph's
+                compiled executables and adds an unsorted delta-segment
+                delivery per hop — cross-epoch executable-cache hits.
+
+Canonical orders (the whole module hangs on these three):
+
+  vertices   (vtype, epoch introduced, external key)  — type-major is
+             preserved (``type_ranges`` stays a range check) and new
+             vertices of a type append at the end of its block, so the gid
+             remap between epochs is monotone;
+  edges      (epoch introduced, src key, dst key, etype, external key) —
+             edge ids are append-only across epochs, so eprop rows and
+             traversal ``t_eid`` entries never move;
+  prop rows  per entity (epoch, life start, life end, value) — a set, not a
+             sequence: any within-epoch event permutation pivots to the same
+             PropColumn.
+
+Within one epoch the materializer groups events by kind before applying
+them, so replay is order-insensitive *by construction*; the only
+order-sensitive part is the log's optional incremental referential-integrity
+validation (``validate=False`` to ingest unordered streams).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.graph import (NO_VALUE, PropColumn, TemporalGraph,
+                          make_prop_column)
+
+# ---------------------------------------------------------------- events
+EV_ADD_VERTEX = 0    # key=vertex key,  data=(vtype, life0, life1)
+EV_ADD_EDGE = 1      # key=edge key,    data=(src key, dst key, etype, l0, l1)
+EV_SET_VPROP = 2     # key=vertex key,  data=(prop key, value, l0, l1)
+EV_SET_EPROP = 3     # key=edge key,    data=(prop key, value, l0, l1)
+EV_CLOSE_VERTEX = 4  # key=vertex key,  data=(t,)   → life1 = min(life1, t)
+EV_CLOSE_EDGE = 5    # key=edge key,    data=(t,)
+
+EVENT_KINDS = (EV_ADD_VERTEX, EV_ADD_EDGE, EV_SET_VPROP, EV_SET_EPROP,
+               EV_CLOSE_VERTEX, EV_CLOSE_EDGE)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Event:
+    """One temporal event.  ``order=True`` gives the canonical within-epoch
+    sort (kind, key, data) used by the permutation-invariant fingerprints."""
+    kind: int
+    key: int
+    data: Tuple[int, ...]
+
+
+def add_vertex(key: int, vtype: int, life: Tuple[int, int]) -> Event:
+    return Event(EV_ADD_VERTEX, int(key), (int(vtype), int(life[0]), int(life[1])))
+
+
+def add_edge(key: int, src_key: int, dst_key: int, etype: int,
+             life: Tuple[int, int]) -> Event:
+    return Event(EV_ADD_EDGE, int(key),
+                 (int(src_key), int(dst_key), int(etype),
+                  int(life[0]), int(life[1])))
+
+
+def set_vprop(key: int, pkey: int, value: int, life: Tuple[int, int]) -> Event:
+    return Event(EV_SET_VPROP, int(key),
+                 (int(pkey), int(value), int(life[0]), int(life[1])))
+
+
+def set_eprop(key: int, pkey: int, value: int, life: Tuple[int, int]) -> Event:
+    return Event(EV_SET_EPROP, int(key),
+                 (int(pkey), int(value), int(life[0]), int(life[1])))
+
+
+def close_vertex(key: int, t: int) -> Event:
+    return Event(EV_CLOSE_VERTEX, int(key), (int(t),))
+
+
+def close_edge(key: int, t: int) -> Event:
+    return Event(EV_CLOSE_EDGE, int(key), (int(t),))
+
+
+def events_fingerprint(prev_fp: str, events: Sequence[Event]) -> str:
+    """Chained, permutation-invariant fingerprint: hash of the previous
+    fingerprint plus the epoch's events in canonical sorted order.  Two logs
+    share an epoch fingerprint iff they share base content and (as sets) the
+    same event history — O(delta) per epoch, never O(graph)."""
+    h = hashlib.sha1(prev_fp.encode())
+    for ev in sorted(events):
+        h.update(repr((ev.kind, ev.key, ev.data)).encode())
+    return h.hexdigest()[:16]
+
+
+class EventLog:
+    """Append-only temporal event log with sealed-epoch boundaries.
+
+    The log carries the fixed schema every materialization shares (type
+    counts, the global ``lifespan`` that bucket edges derive from, ``meta``
+    passed through to graphs).  ``append``/``extend`` add events to the
+    *open* suffix; ``seal()`` freezes that suffix as the next epoch.  Sealed
+    events are immutable — epoch-pinned queries (serving/epochs.py) rely on
+    that for snapshot isolation.
+
+    With ``validate=True`` (default) appends check referential integrity
+    incrementally: known endpoint keys, no duplicate adds, edge lifespans
+    within both endpoints' current lifespans, and vertex closes never
+    truncating below a live incident edge (the engine's graph-level
+    invariant).  Validation is the only order-sensitive part of ingestion;
+    disable it to ingest streams whose within-epoch order is arbitrary.
+    """
+
+    def __init__(self, n_vertex_types: int, n_edge_types: int,
+                 lifespan: Tuple[int, int], meta: Optional[dict] = None,
+                 validate: bool = True):
+        self.n_vertex_types = int(n_vertex_types)
+        self.n_edge_types = int(n_edge_types)
+        self.lifespan = (int(lifespan[0]), int(lifespan[1]))
+        self.meta = dict(meta or {})
+        self.validate = validate
+        self._events: List[Event] = []
+        self._seals: List[int] = []          # event-count boundary per epoch
+        # validation state (only maintained when validate=True)
+        self._v: Dict[int, list] = {}   # key -> [vtype, l0, l1, max_inc_end]
+        self._e: Dict[int, list] = {}   # key -> [skey, dkey, l0, l1]
+
+    # ------------------------------------------------------------- append
+    def _check(self, ev: Event) -> None:
+        k = ev.kind
+        if k == EV_ADD_VERTEX:
+            if ev.key in self._v:
+                raise ValueError(f"duplicate vertex key {ev.key}")
+            vt, l0, l1 = ev.data
+            if not (0 <= vt < self.n_vertex_types):
+                raise ValueError(f"vertex type {vt} out of range")
+            if l0 >= l1:
+                raise ValueError(f"empty vertex lifespan ({l0}, {l1})")
+            self._v[ev.key] = [vt, l0, l1, l0]
+        elif k == EV_ADD_EDGE:
+            if ev.key in self._e:
+                raise ValueError(f"duplicate edge key {ev.key}")
+            sk, dk, et, l0, l1 = ev.data
+            if not (0 <= et < self.n_edge_types):
+                raise ValueError(f"edge type {et} out of range")
+            if l0 >= l1:
+                raise ValueError(f"empty edge lifespan ({l0}, {l1})")
+            for ep in (sk, dk):
+                v = self._v.get(ep)
+                if v is None:
+                    raise ValueError(f"edge {ev.key} references unknown vertex {ep}")
+                if l0 < v[1] or l1 > v[2]:
+                    raise ValueError(
+                        f"edge {ev.key} lifespan ({l0}, {l1}) outside vertex "
+                        f"{ep} lifespan ({v[1]}, {v[2]})")
+                v[3] = max(v[3], l1)
+            self._e[ev.key] = [sk, dk, l0, l1]
+        elif k in (EV_SET_VPROP, EV_SET_EPROP):
+            tab = self._v if k == EV_SET_VPROP else self._e
+            if ev.key not in tab:
+                raise ValueError(f"property on unknown entity key {ev.key}")
+            if ev.data[2] >= ev.data[3]:
+                raise ValueError(f"empty property lifespan {ev.data[2:]}")
+        elif k == EV_CLOSE_VERTEX:
+            v = self._v.get(ev.key)
+            if v is None:
+                raise ValueError(f"close of unknown vertex {ev.key}")
+            (t,) = ev.data
+            if t <= v[1]:
+                raise ValueError(f"vertex close at {t} not after start {v[1]}")
+            if t < v[3]:
+                raise ValueError(
+                    f"vertex close at {t} truncates a live incident edge "
+                    f"(ends {v[3]})")
+            v[2] = min(v[2], t)
+        elif k == EV_CLOSE_EDGE:
+            e = self._e.get(ev.key)
+            if e is None:
+                raise ValueError(f"close of unknown edge {ev.key}")
+            (t,) = ev.data
+            if t <= e[2]:
+                raise ValueError(f"edge close at {t} not after start {e[2]}")
+            e[3] = min(e[3], t)
+        else:
+            raise ValueError(f"unknown event kind {k}")
+
+    def append(self, ev: Event) -> None:
+        if self.validate:
+            self._check(ev)
+        self._events.append(ev)
+
+    def extend(self, events: Iterable[Event]) -> int:
+        n = 0
+        for ev in events:
+            self.append(ev)
+            n += 1
+        return n
+
+    # -------------------------------------------------------------- epochs
+    def seal(self) -> List[Event]:
+        """Freeze the open suffix as the next epoch; returns its events
+        (possibly empty — an empty epoch is a valid no-op snapshot)."""
+        self._seals.append(len(self._events))
+        return self.epoch_events(len(self._seals) - 1)
+
+    @property
+    def n_epochs(self) -> int:
+        return len(self._seals)
+
+    @property
+    def n_open(self) -> int:
+        """Events appended but not yet sealed into an epoch."""
+        start = self._seals[-1] if self._seals else 0
+        return len(self._events) - start
+
+    def epoch_events(self, i: int) -> List[Event]:
+        lo = self._seals[i - 1] if i > 0 else 0
+        return self._events[lo:self._seals[i]]
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def clone(self) -> "EventLog":
+        """Independent copy (events, seals, validation state) — replay the
+        same stream through several managers without sharing seal state."""
+        out = EventLog(self.n_vertex_types, self.n_edge_types, self.lifespan,
+                       meta=self.meta, validate=self.validate)
+        out._events = list(self._events)
+        out._seals = list(self._seals)
+        out._v = {k: list(v) for k, v in self._v.items()}
+        out._e = {k: list(v) for k, v in self._e.items()}
+        return out
+
+
+# ------------------------------------------------------- canonical tables
+def _canonical_tables(log: EventLog, upto: int) -> dict:
+    """Entity/prop tables for the first ``upto`` epochs in canonical order.
+
+    Closes are applied after all adds (min over close times), so the result
+    depends only on the *set* of events per epoch, never their order."""
+    verts: Dict[int, list] = {}   # key -> [vtype, l0, l1, epoch]
+    edges: Dict[int, list] = {}   # key -> [skey, dkey, etype, l0, l1, epoch]
+    vrows: Dict[int, list] = {}   # pkey -> [(epoch, key, l0, l1, val)]
+    erows: Dict[int, list] = {}
+    closes_v: List[Tuple[int, int]] = []
+    closes_e: List[Tuple[int, int]] = []
+    for ep in range(upto):
+        for ev in log.epoch_events(ep):
+            k = ev.kind
+            if k == EV_ADD_VERTEX:
+                if ev.key in verts:
+                    raise ValueError(f"duplicate vertex key {ev.key}")
+                vt, l0, l1 = ev.data
+                verts[ev.key] = [vt, l0, l1, ep]
+            elif k == EV_ADD_EDGE:
+                if ev.key in edges:
+                    raise ValueError(f"duplicate edge key {ev.key}")
+                sk, dk, et, l0, l1 = ev.data
+                edges[ev.key] = [sk, dk, et, l0, l1, ep]
+            elif k == EV_SET_VPROP:
+                pk, val, l0, l1 = ev.data
+                vrows.setdefault(pk, []).append((ep, ev.key, l0, l1, val))
+            elif k == EV_SET_EPROP:
+                pk, val, l0, l1 = ev.data
+                erows.setdefault(pk, []).append((ep, ev.key, l0, l1, val))
+            elif k == EV_CLOSE_VERTEX:
+                closes_v.append((ev.key, ev.data[0]))
+            elif k == EV_CLOSE_EDGE:
+                closes_e.append((ev.key, ev.data[0]))
+    for key, t in closes_v:
+        verts[key][2] = min(verts[key][2], t)
+    for key, t in closes_e:
+        edges[key][4] = min(edges[key][4], t)
+
+    v_key = np.array(list(verts.keys()), np.int64).reshape(-1)
+    v_cols = np.array([verts[k] for k in v_key], np.int64).reshape(-1, 4)
+    vo = np.lexsort((v_key, v_cols[:, 3], v_cols[:, 0])) if len(v_key) else \
+        np.zeros(0, np.int64)
+    e_key = np.array(list(edges.keys()), np.int64).reshape(-1)
+    e_cols = np.array([edges[k] for k in e_key], np.int64).reshape(-1, 6)
+    eo = np.lexsort((e_key, e_cols[:, 2], e_cols[:, 1], e_cols[:, 0],
+                     e_cols[:, 5])) if len(e_key) else np.zeros(0, np.int64)
+    return dict(
+        v_key=v_key[vo], v_type=v_cols[vo, 0].astype(np.int32),
+        v_life=v_cols[vo, 1:3].astype(np.int32),
+        v_epoch=v_cols[vo, 3].astype(np.int32),
+        e_key=e_key[eo], e_srck=e_cols[eo, 0], e_dstk=e_cols[eo, 1],
+        e_type=e_cols[eo, 2].astype(np.int32),
+        e_life=e_cols[eo, 3:5].astype(np.int32),
+        e_epoch=e_cols[eo, 5].astype(np.int32),
+        vrows=vrows, erows=erows,
+    )
+
+
+def _pivot_rows(rows: List[tuple], key_to_id: Dict[int, int],
+                n_entities: int) -> PropColumn:
+    """Canonical PropColumn pivot: rows globally sorted by (epoch, l0, l1,
+    value) so each entity's slot order is canonical (``make_prop_column``
+    preserves the given within-entity row order)."""
+    a = np.array(rows, np.int64).reshape(-1, 5)
+    order = np.lexsort((a[:, 4], a[:, 3], a[:, 2], a[:, 0]))
+    a = a[order]
+    ids = np.array([key_to_id[int(k)] for k in a[:, 1]], np.int64)
+    return make_prop_column(n_entities, ids, a[:, 4].astype(np.int32),
+                            a[:, 2:4].astype(np.int32))
+
+
+def materialize(log: EventLog, upto: Optional[int] = None) -> TemporalGraph:
+    """From-scratch canonical replay of the first ``upto`` sealed epochs.
+
+    This is the *reference* build: plain canonical sorts, traversal arrays
+    via the graph's own lexsort.  ``Materializer`` must produce bit-identical
+    arrays for every epoch (test-pinned) — a pinned epoch served from the
+    incremental path answers exactly like this rebuild."""
+    upto = log.n_epochs if upto is None else int(upto)
+    t = _canonical_tables(log, upto)
+    gid = {int(k): i for i, k in enumerate(t["v_key"])}
+    eid = {int(k): i for i, k in enumerate(t["e_key"])}
+    e_src = np.array([gid[int(k)] for k in t["e_srck"]], np.int32)
+    e_dst = np.array([gid[int(k)] for k in t["e_dstk"]], np.int32)
+    vprops = {pk: _pivot_rows(rows, gid, len(t["v_key"]))
+              for pk, rows in sorted(t["vrows"].items())}
+    eprops = {pk: _pivot_rows(rows, eid, len(t["e_key"]))
+              for pk, rows in sorted(t["erows"].items())}
+    return TemporalGraph(
+        t["v_type"], t["v_life"], e_src, e_dst, t["e_type"], t["e_life"],
+        vprops, eprops, log.n_vertex_types, log.n_edge_types, log.lifespan,
+        meta=dict(log.meta))
+
+
+# ---------------------------------------------------- incremental replay
+@dataclasses.dataclass
+class DeltaSpec:
+    """Padded device block for the base-CSR + delta-segment execution path.
+
+    Holds the traversal entries (both directions) of every edge appended
+    since the last compaction, padded to a pow-2 ``capacity`` so the jitted
+    delta executable retraces at most log2 times as the delta grows.  Padded
+    slots carry an empty lifespan and ``valid=False`` — doubly masked out of
+    every predicate.  ``eprop_slots`` mirrors the base graph's edge-property
+    schema with all-missing columns (delta-pure edges carry no properties by
+    construction), so property clauses evaluate identically to the merged
+    graph."""
+    n_edges: int
+    capacity: int
+    arrays: Dict[str, np.ndarray]
+    eprop_slots: Dict[int, int]
+
+    def device(self) -> dict:
+        """jnp views shaped like an engine ``gdev`` (cached)."""
+        dev = getattr(self, "_device", None)
+        if dev is None:
+            import jax.numpy as jnp
+            n = 2 * self.capacity
+            dev = {k: jnp.asarray(v) for k, v in self.arrays.items()}
+            dev["eprops_t"] = {
+                k: (jnp.full((n, s), NO_VALUE, jnp.int32),
+                    jnp.zeros((n, s, 2), jnp.int32))
+                for k, s in self.eprop_slots.items()
+            }
+            self._device = dev
+        return dev
+
+
+def _pow2(n: int, floor: int = 256) -> int:
+    c = floor
+    while c < n:
+        c *= 2
+    return c
+
+
+class Materializer:
+    """Incremental epoch-by-epoch materialization of an EventLog.
+
+    ``apply_next()`` folds the next sealed epoch into the previous epoch's
+    graph without re-sorting the world:
+
+      * new vertices insert at the end of their type block — the gid remap
+        is monotone, so every sorted structure stays sorted under it;
+      * new edges append (edge ids never move) and their 2·d traversal
+        entries merge into the arrival-sorted order with two searchsorted
+        calls (O(E + d log d), vs the O(E log E) from-scratch lexsort);
+      * untouched property columns are reused (or row-extended) by
+        reference; touched keys re-pivot from the accumulated canonical
+        rows.
+
+    Each epoch yields a NEW immutable TemporalGraph (previous epochs' arrays
+    are never mutated — snapshot isolation is structural).  ``compact()``
+    re-bases the delta window: the current graph becomes the base every
+    later ``DeltaSpec`` is measured against.
+    """
+
+    def __init__(self, log: EventLog):
+        self.log = log
+        self.applied = 0
+        self.graph: Optional[TemporalGraph] = None
+        self._v_key = np.zeros(0, np.int64)
+        self._v_epoch = np.zeros(0, np.int32)
+        self._e_key = np.zeros(0, np.int64)
+        self._key2gid: Dict[int, int] = {}
+        self._key2eid: Dict[int, int] = {}
+        self._vrows: Dict[int, list] = {}
+        self._erows: Dict[int, list] = {}
+        # delta window since the last compaction
+        self.base_graph: Optional[TemporalGraph] = None
+        self.base_n_edges = 0
+        self._delta_pure = True
+        self._remap_from_base = np.zeros(0, np.int64)
+
+    # ------------------------------------------------------------ helpers
+    def _bootstrap(self) -> TemporalGraph:
+        g = materialize(self.log, 1)
+        t = _canonical_tables(self.log, 1)
+        self._v_key, self._v_epoch = t["v_key"], t["v_epoch"]
+        self._e_key = t["e_key"]
+        self._key2gid = {int(k): i for i, k in enumerate(self._v_key)}
+        self._key2eid = {int(k): i for i, k in enumerate(self._e_key)}
+        self._vrows = {pk: list(rows) for pk, rows in t["vrows"].items()}
+        self._erows = {pk: list(rows) for pk, rows in t["erows"].items()}
+        self.graph = g
+        self.applied = 1
+        self.compact()
+        return g
+
+    def vertex_type_of_key(self, key: int) -> int:
+        return int(self.graph.v_type[self._key2gid[key]])
+
+    def edge_endpoint_types(self, key: int) -> Tuple[int, int]:
+        e = self._key2eid[key]
+        return (int(self.graph.v_type[self.graph.e_src[e]]),
+                int(self.graph.v_type[self.graph.e_dst[e]]))
+
+    # ----------------------------------------------------------- epochs
+    def apply_next(self) -> TemporalGraph:
+        """Apply the next sealed epoch; returns that epoch's graph."""
+        if self.applied >= self.log.n_epochs:
+            raise ValueError("no sealed epoch to apply — call log.seal()")
+        if self.graph is None:
+            return self._bootstrap()
+        p = self.applied
+        evs = self.log.epoch_events(p)
+        g = self.graph
+        adds_v = [e for e in evs if e.kind == EV_ADD_VERTEX]
+        adds_e = [e for e in evs if e.kind == EV_ADD_EDGE]
+        sets_v = [e for e in evs if e.kind == EV_SET_VPROP]
+        sets_e = [e for e in evs if e.kind == EV_SET_EPROP]
+        cls_v = [e for e in evs if e.kind == EV_CLOSE_VERTEX]
+        cls_e = [e for e in evs if e.kind == EV_CLOSE_EDGE]
+        V0, E0 = g.n_vertices, g.n_edges
+
+        # ---- vertices: monotone insert at type-block ends
+        remap = None
+        v_type, v_life = g.v_type, g.v_life
+        v_key, v_epoch = self._v_key, self._v_epoch
+        if adds_v:
+            nk = np.array([e.key for e in adds_v], np.int64)
+            nt = np.array([e.data[0] for e in adds_v], np.int32)
+            nl = np.array([e.data[1:3] for e in adds_v], np.int32)
+            o = np.lexsort((nk, nt))
+            nk, nt, nl = nk[o], nt[o], nl[o]
+            for k in nk:
+                if int(k) in self._key2gid:
+                    raise ValueError(f"duplicate vertex key {int(k)}")
+            per_type = np.bincount(nt, minlength=g.n_vertex_types)
+            before = np.concatenate(([0], np.cumsum(per_type)))
+            remap = np.arange(V0, dtype=np.int64) + before[g.v_type]
+            rank = np.arange(len(nt)) - before[nt]
+            new_gids = (g.type_ranges[nt, 1].astype(np.int64)
+                        + before[nt] + rank)
+            V = V0 + len(nk)
+            v_type = np.empty(V, np.int32)
+            v_type[remap], v_type[new_gids] = g.v_type, nt
+            v_life = np.empty((V, 2), np.int32)
+            v_life[remap], v_life[new_gids] = g.v_life, nl
+            v_key = np.empty(V, np.int64)
+            v_key[remap], v_key[new_gids] = self._v_key, nk
+            v_epoch = np.empty(V, np.int32)
+            v_epoch[remap], v_epoch[new_gids] = self._v_epoch, p
+            self._key2gid = {int(k): i for i, k in enumerate(v_key)}
+        V = v_type.shape[0]
+        if cls_v:
+            v_life = v_life.copy() if v_life is g.v_life else v_life
+            for e in cls_v:
+                gi = self._key2gid[e.key]
+                v_life[gi, 1] = min(int(v_life[gi, 1]), e.data[0])
+
+        # ---- edges: append in canonical order, remap endpoints
+        if remap is not None:
+            e_src = remap[g.e_src].astype(np.int32)
+            e_dst = remap[g.e_dst].astype(np.int32)
+        else:
+            e_src, e_dst = g.e_src, g.e_dst
+        e_type, e_life, e_key = g.e_type, g.e_life, self._e_key
+        d_src = d_dst = None
+        if adds_e:
+            ek = np.array([e.key for e in adds_e], np.int64)
+            cols = np.array([e.data for e in adds_e], np.int64)
+            o = np.lexsort((ek, cols[:, 2], cols[:, 1], cols[:, 0]))
+            ek, cols = ek[o], cols[o]
+            for k in ek:
+                if int(k) in self._key2eid:
+                    raise ValueError(f"duplicate edge key {int(k)}")
+            d_src = np.array([self._key2gid[int(k)] for k in cols[:, 0]],
+                             np.int32)
+            d_dst = np.array([self._key2gid[int(k)] for k in cols[:, 1]],
+                             np.int32)
+            e_src = np.concatenate([e_src, d_src])
+            e_dst = np.concatenate([e_dst, d_dst])
+            e_type = np.concatenate([e_type, cols[:, 2].astype(np.int32)])
+            e_life = np.concatenate([e_life, cols[:, 3:5].astype(np.int32)])
+            e_key = np.concatenate([e_key, ek])
+            for i, k in enumerate(ek):
+                self._key2eid[int(k)] = E0 + i
+        E = e_src.shape[0]
+        if cls_e:
+            e_life = e_life.copy() if e_life is g.e_life else e_life
+            for e in cls_e:
+                ei = self._key2eid[e.key]
+                e_life[ei, 1] = min(int(e_life[ei, 1]), e.data[0])
+
+        # ---- properties: copy-on-write columns
+        touched_v = {e.data[0] for e in sets_v}
+        touched_e = {e.data[0] for e in sets_e}
+        for e in sets_v:
+            pk, val, l0, l1 = e.data
+            self._vrows.setdefault(pk, []).append((p, e.key, l0, l1, val))
+        for e in sets_e:
+            pk, val, l0, l1 = e.data
+            self._erows.setdefault(pk, []).append((p, e.key, l0, l1, val))
+        vprops: Dict[int, PropColumn] = {}
+        for pk in sorted(set(g.vprops) | touched_v):
+            if pk in touched_v:
+                vprops[pk] = _pivot_rows(self._vrows[pk], self._key2gid, V)
+            elif remap is not None:
+                col = g.vprops[pk]
+                vals = np.full((V, col.n_slots), NO_VALUE, np.int32)
+                life = np.zeros((V, col.n_slots, 2), np.int32)
+                vals[remap], life[remap] = col.vals, col.life
+                vprops[pk] = PropColumn(vals, life)
+            else:
+                vprops[pk] = g.vprops[pk]
+        eprops: Dict[int, PropColumn] = {}
+        for pk in sorted(set(g.eprops) | touched_e):
+            if pk in touched_e:
+                eprops[pk] = _pivot_rows(self._erows[pk], self._key2eid, E)
+            elif adds_e:
+                col = g.eprops[pk]
+                d = E - E0
+                vals = np.concatenate(
+                    [col.vals, np.full((d, col.n_slots), NO_VALUE, np.int32)])
+                life = np.concatenate(
+                    [col.life, np.zeros((d, col.n_slots, 2), np.int32)])
+                eprops[pk] = PropColumn(vals, life)
+            else:
+                eprops[pk] = g.eprops[pk]
+
+        # ---- traversal: monotone remap + searchsorted merge of new entries
+        tr = g.traversal
+        tb_eid = tr["t_eid"].astype(np.int64)
+        tb_fwd = tr["t_isfwd"].astype(np.int64)
+        if remap is not None:
+            tb_src = remap[tr["t_src"]]
+            tb_dst = remap[tr["t_dst"]]
+        else:
+            tb_src = tr["t_src"].astype(np.int64)
+            tb_dst = tr["t_dst"].astype(np.int64)
+        if adds_e:
+            d = E - E0
+            dd_eid = np.concatenate([np.arange(E0, E), np.arange(E0, E)])
+            dd_fwd = np.concatenate([np.ones(d, np.int64),
+                                     np.zeros(d, np.int64)])
+            dd_src = np.concatenate([d_src, d_dst]).astype(np.int64)
+            dd_dst = np.concatenate([d_dst, d_src]).astype(np.int64)
+            od = np.lexsort((dd_eid, 1 - dd_fwd, dd_src, dd_dst))
+            dd_eid, dd_fwd = dd_eid[od], dd_fwd[od]
+            dd_src, dd_dst = dd_src[od], dd_dst[od]
+
+            def enc(dst, src, fwd):
+                return (dst * (V + 1) + src) * 2 + (1 - fwd)
+
+            eb, ed = enc(tb_dst, tb_src, tb_fwd), enc(dd_dst, dd_src, dd_fwd)
+            # merged positions: equal keys put base entries first (base edge
+            # ids < appended ids, matching the from-scratch stable lexsort)
+            pos_b = np.arange(len(eb)) + np.searchsorted(ed, eb, side="left")
+            pos_d = np.arange(len(ed)) + np.searchsorted(eb, ed, side="right")
+            m_eid = np.empty(len(eb) + len(ed), np.int64)
+            m_fwd = np.empty_like(m_eid)
+            m_eid[pos_b], m_eid[pos_d] = tb_eid, dd_eid
+            m_fwd[pos_b], m_fwd[pos_d] = tb_fwd, dd_fwd
+        else:
+            m_eid, m_fwd = tb_eid, tb_fwd
+        t_src = np.where(m_fwd == 1, e_src[m_eid], e_dst[m_eid])
+        t_dst = np.where(m_fwd == 1, e_dst[m_eid], e_src[m_eid])
+        arr_ptr = np.zeros(V + 1, np.int64)
+        np.cumsum(np.bincount(t_dst, minlength=V), out=arr_ptr[1:])
+        trav = dict(
+            t_src=t_src.astype(np.int32), t_dst=t_dst.astype(np.int32),
+            t_life=e_life[m_eid], t_type=e_type[m_eid],
+            t_isfwd=m_fwd.astype(np.int32), t_eid=m_eid.astype(np.int32),
+            arr_ptr=arr_ptr.astype(np.int32),
+        )
+
+        ng = TemporalGraph(v_type, v_life, e_src, e_dst, e_type, e_life,
+                           vprops, eprops, g.n_vertex_types, g.n_edge_types,
+                           self.log.lifespan, meta=dict(g.meta))
+        ng.__dict__["traversal"] = trav   # bypass the cached_property lexsort
+
+        # ---- delta-window bookkeeping
+        if remap is not None:
+            self._remap_from_base = remap[self._remap_from_base]
+        if adds_v or sets_v or sets_e or cls_v:
+            self._delta_pure = False
+        for e in cls_e:
+            if self._key2eid[e.key] < self.base_n_edges:
+                self._delta_pure = False
+        self._v_key, self._v_epoch, self._e_key = v_key, v_epoch, e_key
+        self.graph = ng
+        self.applied += 1
+        return ng
+
+    # ------------------------------------------------------------- delta
+    def compact(self) -> None:
+        """Re-base the delta window: the current graph becomes the base the
+        next DeltaSpec (and the serving caches' base fingerprint) refer to."""
+        self.base_graph = self.graph
+        self.base_n_edges = self.graph.n_edges
+        self._delta_pure = True
+        self._remap_from_base = np.arange(self.graph.n_vertices,
+                                          dtype=np.int64)
+
+    @property
+    def delta_pure(self) -> bool:
+        """True while every event since the last compaction is an edge
+        append or a close on an appended edge — the delta-executable
+        eligibility condition."""
+        return self._delta_pure
+
+    def delta_spec(self) -> Optional[DeltaSpec]:
+        """Padded delta-segment block since the base, or None when the
+        window is impure (or empty): impure windows fall back to the merged
+        epoch graph."""
+        g, b0 = self.graph, self.base_n_edges
+        if not self._delta_pure or g is None:
+            return None
+        nd = g.n_edges - b0
+        if nd == 0:
+            return None
+        cap = _pow2(nd)
+        n = 2 * cap
+
+        def pad(a, fill=0):
+            out = np.full((n,) + a.shape[1:], fill, a.dtype)
+            out[:2 * nd] = np.concatenate([a, a]) if a.ndim > 0 else a
+            return out
+
+        src, dst = g.e_src[b0:], g.e_dst[b0:]
+        arrays = dict(
+            t_src=np.full(n, 0, np.int32), t_dst=np.full(n, 0, np.int32),
+            t_life=np.zeros((n, 2), np.int32),
+            t_type=pad(g.e_type[b0:]),
+            t_isfwd=np.zeros(n, np.int32),
+            valid=np.zeros(n, bool),
+        )
+        arrays["t_src"][:2 * nd] = np.concatenate([src, dst])
+        arrays["t_dst"][:2 * nd] = np.concatenate([dst, src])
+        arrays["t_life"][:2 * nd] = np.concatenate([g.e_life[b0:]] * 2)
+        arrays["t_isfwd"][:nd] = 1
+        arrays["valid"][:2 * nd] = True
+        return DeltaSpec(nd, cap, arrays,
+                         {k: c.n_slots for k, c in g.eprops.items()})
+
+    def partition_hint(self) -> Optional[Callable]:
+        """Partition carry-over for the current epoch graph: a callable
+        ``(n_workers, parts_per_type) -> Partitioning | None`` extending the
+        base graph's cached partitioning over the delta (partitioner
+        ``extend_partitioning``) instead of re-running BFS growth.  Any
+        assignment is bit-identical on the partitioned executor; the hint
+        only saves repartitioning time."""
+        base, g = self.base_graph, self.graph
+        if base is None or g is None or g is base:
+            return None
+        remap = self._remap_from_base.copy()
+
+        def hint(n_workers: int, parts_per_type: int):
+            from .partitioner import extend_partitioning
+            cache = getattr(base, "_partition_cache", None) or {}
+            hit = cache.get((n_workers, parts_per_type))
+            if hit is None:
+                return None
+            return extend_partitioning(hit[0], g, remap)
+
+        return hint
+
+
+# --------------------------------------------------------- stream helpers
+def log_from_graph(graph: TemporalGraph, holdout_edges: int = 0,
+                   seed: int = 0) -> Tuple[EventLog, List[Event]]:
+    """Decompose a built TemporalGraph into an EventLog whose epoch 0
+    rebuilds it minus ``holdout_edges`` random edges; the held-out edges are
+    returned as pure ADD_EDGE events (properties dropped, which keeps later
+    epochs delta-executable) for the caller to ingest in later epochs.
+
+    External keys are the source graph's vertex/edge ids, so epoch-0
+    materialization reproduces the vertex order exactly (edges re-sort into
+    canonical key order; engine results are unaffected by edge order)."""
+    rng = np.random.default_rng(seed)
+    E = graph.n_edges
+    held = np.zeros(E, bool)
+    if holdout_edges:
+        held[rng.choice(E, size=min(holdout_edges, E), replace=False)] = True
+    log = EventLog(graph.n_vertex_types, graph.n_edge_types, graph.lifespan,
+                   meta=dict(graph.meta))
+    for v in range(graph.n_vertices):
+        log.append(add_vertex(v, int(graph.v_type[v]),
+                              tuple(graph.v_life[v])))
+    for pk, col in sorted(graph.vprops.items()):
+        ent, slot = np.nonzero(col.vals != NO_VALUE)
+        for v, s in zip(ent, slot):
+            log.append(set_vprop(int(v), pk, int(col.vals[v, s]),
+                                 tuple(col.life[v, s])))
+    for e in range(E):
+        if held[e]:
+            continue
+        log.append(add_edge(e, int(graph.e_src[e]), int(graph.e_dst[e]),
+                            int(graph.e_type[e]), tuple(graph.e_life[e])))
+    for pk, col in sorted(graph.eprops.items()):
+        ent, slot = np.nonzero(col.vals != NO_VALUE)
+        for e, s in zip(ent, slot):
+            if not held[e]:
+                log.append(set_eprop(int(e), pk, int(col.vals[e, s]),
+                                     tuple(col.life[e, s])))
+    log.seal()
+    held_events = [add_edge(e, int(graph.e_src[e]), int(graph.e_dst[e]),
+                            int(graph.e_type[e]), tuple(graph.e_life[e]))
+                   for e in np.nonzero(held)[0]]
+    return log, held_events

@@ -127,6 +127,65 @@ def partition_graph(
     )
 
 
+def extend_partitioning(base: Partitioning, graph: TemporalGraph,
+                        remap: np.ndarray):
+    """Carry a partitioning forward over an ingestion epoch (the partitioner
+    delta table of graphdata/ingest.py).
+
+    ``remap[i]`` is base vertex i's gid in ``graph``; carried vertices keep
+    their sub-partition, and each NEW vertex joins a same-type part by
+    majority vote over its already-assigned neighbours (ties → lowest part
+    id; isolated vertices → the least-loaded part of the type).  Worker
+    placement is untouched, so the epoch's partition tables stay aligned
+    with the base's and only the delta is re-placed — O(new + incident
+    edges) instead of the full BFS growth.  Any assignment yields
+    bit-identical results on the partitioned executor (ownership only
+    routes delivery); the vote just keeps the edge cut from degrading.
+
+    Returns None when a new vertex's type has no existing part (a type
+    introduced mid-stream) — the caller falls back to a fresh
+    ``partition_graph``."""
+    V = graph.n_vertices
+    part_of = np.full(V, -1, np.int32)
+    part_of[remap] = base.part_of
+    n_parts = base.n_parts
+    assigned = part_of >= 0
+    part_type = np.full(n_parts, -1, np.int32)
+    part_type[part_of[assigned]] = graph.v_type[assigned]
+    sizes = np.bincount(part_of[assigned], minlength=n_parts).astype(np.int64)
+    new = np.nonzero(~assigned)[0]
+    cands = {t: np.nonzero(part_type == t)[0]
+             for t in range(graph.n_vertex_types)}
+    # adjacency restricted to edges touching an unassigned vertex
+    nbrs: Dict[int, list] = {}
+    touch = ~assigned[graph.e_src] | ~assigned[graph.e_dst]
+    for s, d in zip(graph.e_src[touch], graph.e_dst[touch]):
+        nbrs.setdefault(int(s), []).append(int(d))
+        nbrs.setdefault(int(d), []).append(int(s))
+    for v in new:
+        c = cands[int(graph.v_type[v])]
+        if len(c) == 0:
+            return None
+        cset = set(int(x) for x in c)
+        votes: Dict[int, int] = {}
+        for u in nbrs.get(int(v), ()):
+            pu = int(part_of[u])
+            if pu >= 0 and pu in cset:
+                votes[pu] = votes.get(pu, 0) + 1
+        if votes:
+            best = min(votes, key=lambda pk: (-votes[pk], pk))
+        else:
+            best = int(c[np.argmin(sizes[c])])
+        part_of[v] = best
+        sizes[best] += 1
+    stats = dict(base.stats)
+    stats.update(kind=str(stats.get("kind", "?")) + "+extend",
+                 edge_cut=_edge_cut(graph, part_of),
+                 extended=int(len(new)))
+    return Partitioning(part_of, base.worker_of_part, n_parts,
+                        base.n_workers, stats)
+
+
 def _edge_cut(graph: TemporalGraph, part_of: np.ndarray) -> float:
     if graph.n_edges == 0:
         return 0.0

@@ -24,6 +24,11 @@ Layout:
                 dense→sliced, bounded dispatch quantum) / reject
   telemetry.py  (predicted, measured) dispatch-cost ring buffer + periodic
                 online θ refit — prediction error shrinks during serving
+  epochs.py     live-graph serving: EpochManager seals event-log epochs,
+                materializes them incrementally, decides compaction, evicts
+                exactly the cache entries whose fingerprints retired, and
+                pins the scheduler to immutable snapshots (queries keep
+                serving during ingestion — see docs/ingestion.md)
   testing.py    FakeDispatcher: synthetic service times on a virtual clock,
                 zero JAX — the deterministic harness the SLO layer is
                 tested on
@@ -33,6 +38,7 @@ from .admission import (AdmissionController, AdmissionDecision,
 from .cache import (ExecutableCache, PlanCache, graph_fingerprint,
                     layout_signature)
 from .compile import PlanTensor, bucket_key, compile_plan_tensor
+from .epochs import Epoch, EpochManager
 from .replay import ReplayReport, replay_workload
 from .scheduler import BatchScheduler, GroupDispatch, ServedResult
 from .telemetry import TelemetryBuffer
@@ -43,5 +49,5 @@ __all__ = [
     "ExecutableCache", "graph_fingerprint", "layout_signature", "PlanTensor",
     "bucket_key", "compile_plan_tensor", "ReplayReport", "replay_workload",
     "AdmissionController", "AdmissionDecision", "AdmissionPolicy",
-    "TelemetryBuffer", "FakeDispatcher",
+    "TelemetryBuffer", "FakeDispatcher", "Epoch", "EpochManager",
 ]

@@ -92,9 +92,27 @@ class AdmissionDecision:
 class AdmissionController:
     """Stateful deadline admission for one BatchScheduler.
 
+    Life of a decision (``decide``, called from ``BatchScheduler.submit``
+    before anything is enqueued): resolve the query's engine/mode and the
+    plan it *would* run at → predict its service cost with the scheduler's
+    live (possibly refit) cost model → compare ``predicted wait + service``
+    against ``headroom · deadline``.  If it fits, ADMIT; otherwise walk the
+    degradation ladder (cheaper hop impl → dense→sliced downgrade → bounded
+    dispatch quantum) and admit DEGRADEd at the first fitting rung; if no
+    rung fits, REJECT at submit time — zero service cost spent, goodput
+    over throughput.
+
+    State is one number: ``backlog_ms``, the summed predicted cost admitted
+    since the last flush (``on_flush`` zeroes it).  That makes decisions
+    deterministic given the submission sequence — the property the
+    virtual-clock SLO tests pin exact admit/degrade/reject traces on.
+
     The scheduler owns the planner and the plan cache; the controller only
     reads them (``peek`` — admission must not poison the batch-aware plan
-    cache with single-query plans).
+    cache with single-query plans).  It holds no graph state at all, so
+    epoch pinning (``BatchScheduler.pin_epoch``) never invalidates it: cost
+    predictions track the scheduler's planner, which rebases only at
+    compaction.
     """
 
     def __init__(self, policy: Optional[AdmissionPolicy] = None):

@@ -86,7 +86,9 @@ def layout_signature(graph, engine: str, qry, n_workers: int,
 class CacheStats:
     hits: int = 0
     misses: int = 0
-    invalidations: int = 0   # whole-cache clears (online θ refits)
+    invalidations: int = 0   # whole-cache clears (online θ refits) count 1;
+                             # targeted evictions (epoch compaction) count
+                             # one per dropped entry
 
     @property
     def lookups(self) -> int:
@@ -129,6 +131,19 @@ class PlanCache:
         self._plans.clear()
         self.stats.invalidations += 1
 
+    def evict(self, pred: Callable[[tuple], bool]) -> int:
+        """Targeted invalidation: drop entries whose KEY matches ``pred``;
+        returns the count.  Unlike ``clear`` (one whole-cache event), every
+        evicted entry counts as one invalidation — the delta-aware path
+        (serving/epochs.py) evicts only keys mentioning retired fingerprints
+        at compaction, and the counters are how tests assert that nothing
+        else was touched."""
+        dead = [k for k in self._plans if pred(k)]
+        for k in dead:
+            del self._plans[k]
+        self.stats.invalidations += len(dead)
+        return len(dead)
+
     def __len__(self) -> int:
         return len(self._plans)
 
@@ -156,6 +171,15 @@ class ExecutableCache:
 
     def __contains__(self, key: tuple) -> bool:
         return key in self._fns
+
+    def evict(self, pred: Callable[[tuple], bool]) -> int:
+        """Targeted invalidation mirroring ``PlanCache.evict`` (one
+        invalidation per dropped executable)."""
+        dead = [k for k in self._fns if pred(k)]
+        for k in dead:
+            del self._fns[k]
+        self.stats.invalidations += len(dead)
+        return len(dead)
 
     def __len__(self) -> int:
         return len(self._fns)

@@ -147,9 +147,43 @@ class GroupDispatch:
     impl: str = "xla"            # hop-delivery lowering the group ran on
     deadline: float = math.inf   # most urgent member's deadline (EDF key)
     predicted_ms: float = 0.0    # cost-model prediction (telemetry rows)
+    delta: bool = False          # served on the base+delta executable path
 
 
 class BatchScheduler:
+    """The serving runtime's dispatch core (see the module docstring for the
+    full control flow).
+
+    Life of a query: ``submit`` admits it (optionally through the SLO
+    admission controller) into the queue; ``flush`` groups the queue by
+    (shape bucket, temporal mode, engine, impl override), plans each group
+    once through the batch-aware cost model (memoised in ``plan_cache``),
+    and dispatches ONE vmapped engine call per group through ``exec_cache``
+    — earliest-deadline-first, results in submission order.
+
+    Live graphs: ``pin_epoch(epoch)`` (driven by ``serving.epochs.
+    EpochManager.advance``) switches the scheduler to a sealed-epoch
+    snapshot without dropping warm state.  Between two compactions the
+    *base* graph (``self.graph``) — planner stats, partitionings, compiled
+    executables — is immutable; an epoch whose delta window is pure edge
+    appends serves eligible groups on the base+delta executable
+    (``engine.batch_executable_delta``), so cache keys carrying the base
+    fingerprint keep hitting across epochs.  Ineligible groups (ETR hops,
+    impure windows, non-dense engines) serve from the epoch's merged graph
+    under the epoch fingerprint.  Either way results are bit-identical to a
+    from-scratch build of the pinned epoch's graph, and queries never see
+    events sealed after their batch's pin.
+
+    Key invariants:
+      * plan keys carry the BASE fingerprint (splits are planned against
+        base statistics; any split yields identical results);
+      * executable keys carry the serving fingerprint — the base
+        fingerprint for delta dispatches, the epoch fingerprint otherwise;
+      * cache eviction at compaction is targeted (``evict`` of retired
+        fingerprints), counted per entry in the metrics registry as
+        ``granite_cache_total{event="invalidation"}``.
+    """
+
     def __init__(
         self,
         graph,
@@ -193,6 +227,17 @@ class BatchScheduler:
         self.mode = mode if mode is not None else (
             E.MODE_BUCKET if dynamic else E.MODE_STATIC)
         self.fingerprint = graph_fingerprint(graph)
+        # ---- epoch pinning (pin_epoch): base vs serving graph split.
+        # self.graph stays the compaction BASE (planner stats, partition
+        # tables, delta executables bind to it); _serve_graph is the pinned
+        # epoch's merged graph (== graph until an epoch is pinned).
+        self._serve_graph = graph
+        self._base_fp = self.fingerprint    # compaction-base fingerprint
+        self._plan_fp = self.fingerprint    # fingerprint slot of plan keys
+        self._epoch = None
+        self._delta = None                  # DeltaSpec.device() dict | None
+        self._delta_capacity = 0
+        self._warmed_delta = set()          # (ekey, capacity) pairs warmed
         self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
         self.exec_cache = exec_cache if exec_cache is not None else ExecutableCache()
         self._stats = GraphStats(graph, n_time_buckets=n_buckets)
@@ -301,6 +346,13 @@ class BatchScheduler:
     def _engine_for(self, qry: Q.PathQuery) -> str:
         if self.engine != "auto":
             return self.engine
+        # with a pinned pure-append delta window, ETR-free queries steer to
+        # the dense engine: base+delta execution is dense-only (the sliced
+        # engine binds type extents to one concrete graph) and reusing the
+        # base executable beats re-tracing sliced on every epoch
+        if self._delta is not None and all(
+                ep.etr_op == -1 for ep in qry.e_preds):
+            return "dense"
         return "sliced" if ES.sliceable(qry) else "dense"
 
     # ------------------------------------------------------------- planning
@@ -317,7 +369,10 @@ class BatchScheduler:
 
     def _plan_key(self, bucket: tuple, mode: int, engine: str,
                   impl_choice: str) -> tuple:
-        return (bucket, self.fingerprint, mode, engine, self.n_buckets,
+        # plans are keyed by the BASE fingerprint: split choice comes from
+        # base statistics and stays optimal-enough across edge-append epochs
+        # (any split is result-identical); compaction retires the key
+        return (bucket, self._plan_fp, mode, engine, self.n_buckets,
                 self.n_workers if engine == "partitioned" else 0, impl_choice)
 
     def _plan_group(self, queries: List[Q.PathQuery], bucket: tuple,
@@ -350,31 +405,64 @@ class BatchScheduler:
     def _build_executable(self, qry: Q.PathQuery, split: int, mode: int,
                           engine: str, impl: str):
         if engine == "partitioned":
-            return EP.batch_executable(self.graph, qry, split, mode,
+            return EP.batch_executable(self._serve_graph, qry, split, mode,
                                        self.n_buckets, self.n_workers,
                                        use_shard_map=self.use_shard_map,
                                        impl=impl)
-        return E.batch_executable(self.graph, qry, split, mode,
+        return E.batch_executable(self._serve_graph, qry, split, mode,
                                   self.n_buckets,
                                   sliced=(engine == "sliced"), impl=impl)
+
+    def _delta_eligible(self, qry: Q.PathQuery, engine: str) -> bool:
+        """Can this group run on the base+delta executable?  Needs a pinned
+        pure-append delta window, the dense engine (sliced/partitioned bind
+        type extents / partition tables to a concrete graph), and no ETR
+        hops (global rank tables)."""
+        return (self._delta is not None and engine == "dense"
+                and all(ep.etr_op == -1 for ep in qry.e_preds))
 
     def _dispatch_jax(self, queries: List[Q.PathQuery], split: int, mode: int,
                       engine: str, impl: str, bucket: tuple, pt, warm: bool):
         """The real build-and-run step: executable cache → one vmapped call,
-        timed.  Swapped out wholesale by an injected ``dispatcher``."""
-        ekey = (engine, self.fingerprint, bucket, split, mode,
+        timed.  Swapped out wholesale by an injected ``dispatcher``.
+
+        Delta-eligible groups run ``engine.batch_executable_delta`` against
+        the compaction BASE: their cache key carries the base fingerprint
+        (not the epoch's) and no capacity, so one cached executable serves
+        every epoch of the window — the scheduler only re-warms when the
+        padded delta capacity grows (a jit retrace inside the same entry).
+        """
+        use_delta = self._delta_eligible(queries[0], engine)
+        self._last_used_delta = use_delta
+        fp = ("delta", self._base_fp) if use_delta else self.fingerprint
+        lay_graph = self.graph if use_delta else self._serve_graph
+        ekey = (engine, fp, bucket, split, mode,
                 self.n_buckets,
                 self.n_workers if engine == "partitioned" else 0,
                 self.n_devices if engine == "partitioned" else 0,
                 impl,
-                layout_signature(self.graph, engine, queries[0],
+                layout_signature(lay_graph, engine, queries[0],
                                  self.n_workers, impl),
                 pt.params.shape[0])
         exec_cached = ekey in self.exec_cache
-        run = self.exec_cache.get_or_build(
-            ekey, lambda: self._build_executable(queries[0], split,
-                                                 mode, engine, impl))
-        if warm and not exec_cached:
+        if use_delta:
+            run0 = self.exec_cache.get_or_build(
+                ekey, lambda: E.batch_executable_delta(
+                    self.graph, queries[0], split, mode, self.n_buckets,
+                    impl=impl))
+            delta = self._delta
+            run = lambda params: run0(params, delta)  # noqa: E731
+            # a cached delta executable still retraces when the padded
+            # capacity grows — warm per (key, capacity), not per key
+            warm_needed = (ekey, self._delta_capacity) not in self._warmed_delta
+            if warm and warm_needed:
+                self._warmed_delta.add((ekey, self._delta_capacity))
+        else:
+            run = self.exec_cache.get_or_build(
+                ekey, lambda: self._build_executable(queries[0], split,
+                                                     mode, engine, impl))
+            warm_needed = not exec_cached
+        if warm and warm_needed:
             # first dispatch at this key: run once untimed so compile
             # stays out of latency (a cache-hit executable has already
             # been traced and run at this key)
@@ -386,6 +474,44 @@ class BatchScheduler:
         res = run(pt.params)
         jax.block_until_ready(res.total)
         return res, self._clock() - t0, exec_cached
+
+    # ------------------------------------------------------------ epochs
+    def pin_epoch(self, epoch) -> None:
+        """Pin serving to a sealed epoch (``serving.epochs.Epoch``).
+
+        Until the next pin, every dispatch answers from this epoch's graph
+        — queries never observe later (or unsealed) events, and results are
+        bit-identical to a from-scratch build of the epoch's graph.  On a
+        compacted epoch the scheduler REBASEs: planner statistics, the
+        partitioned planner, and the estimate memo are rebuilt against the
+        new base (cache eviction of retired fingerprints is the
+        EpochManager's job, so its metrics can count what was dropped).
+        Non-compacted epochs keep all warm state; delta-pure ones also
+        attach the delta block for the base+delta dispatch path."""
+        if epoch.base_fingerprint != self._base_fp:
+            base = epoch.base_graph if epoch.base_graph is not None else epoch.graph
+            self.graph = base
+            self._stats = GraphStats(base, n_time_buckets=self.n_buckets)
+            self._planner = Planner(base, self._stats)
+            self._planner_part = None
+            self._est_memo.clear()
+            self._warmed_delta.clear()
+        self._epoch = epoch
+        self._base_fp = epoch.base_fingerprint
+        self._plan_fp = epoch.base_fingerprint
+        self.fingerprint = epoch.fingerprint
+        self._serve_graph = epoch.graph
+        if epoch.delta is not None:
+            self._delta = epoch.delta.device()
+            self._delta_capacity = epoch.delta.capacity
+        else:
+            self._delta = None
+            self._delta_capacity = 0
+
+    @property
+    def pinned_epoch(self):
+        """The currently pinned ``Epoch`` (None before any ``pin_epoch``)."""
+        return self._epoch
 
     def _estimate_query(self, qry: Q.PathQuery, split: int, engine: str,
                         impl: str):
@@ -559,6 +685,7 @@ class BatchScheduler:
             bucket, mode, engine, impl_over = key
             insts = [queue[i].inst for i in idxs]
             queries = [x.qry for x in insts]
+            self._last_used_delta = False
             try:
                 split, impl, plan_cached, candidates = self._plan_group(
                     queries, bucket, mode, engine, impl_override=impl_over)
@@ -629,7 +756,8 @@ class BatchScheduler:
                      group_deadline, predicted_ms))
             dispatches.append(GroupDispatch(
                 key, engine, split, pt.n_real, pt.n_pad, dt, list(idxs),
-                plan_cached, exec_cached, impl, group_deadline, predicted_ms))
+                plan_cached, exec_cached, impl, group_deadline, predicted_ms,
+                delta=self._last_used_delta))
         for grp in traced_groups:
             self._trace_group(queue, *grp, out)
         self.last_dispatches = dispatches

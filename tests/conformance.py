@@ -376,3 +376,59 @@ def check_serving_case(graph, case: Case, mode: int,
                     continue
                 assert want is not None and got is not None, (ctx, field)
                 assert np.array_equal(want, got), (ctx, field, want, got)
+
+
+# =========================================================================
+# ingestion leg: epoch-pinned serving vs from-scratch builds
+# =========================================================================
+def check_ingestion_case(graph, case: Case, mode: int,
+                         n_buckets: int = N_BUCKETS, n_epochs: int = 2):
+    """The live-graph leg of the matrix: split ``graph`` into a seed epoch
+    plus ``n_epochs`` held-out edge batches, serve ``case``'s query through
+    an epoch-pinned scheduler while ingestion advances between batches, and
+    require every epoch's answers — on dense, sliced (when the query
+    qualifies) and the partitioned engine — to be bit-identical to a
+    scheduler built from scratch on that epoch's ``materialize`` graph.
+    Snapshot isolation is asserted structurally: unsealed events never
+    change a pinned scheduler's results."""
+    from repro.graphdata import ingest
+    from repro.serving import BatchScheduler, EpochManager
+
+    held_n = max(6, 3 * n_epochs)
+    log, held = ingest.log_from_graph(graph, holdout_edges=held_n,
+                                      seed=hash(case.name) % 1000)
+    per = len(held) // n_epochs
+    chunks = [held[i * per:(i + 1) * per] for i in range(n_epochs - 1)]
+    chunks.append(held[(n_epochs - 1) * per:])
+    for engine, n_workers in serving_engines(case):
+        ctx = (case.name, mode, engine, n_workers, "ingest")
+        mgr = EpochManager(log.clone())
+        ep = mgr.seal()
+        sched = BatchScheduler(ep.graph, engine=engine, mode=mode,
+                               n_buckets=n_buckets,
+                               n_workers=max(n_workers, 1))
+        mgr.attach(sched)
+        for k, chunk in enumerate(chunks, start=1):
+            mgr.ingest(chunk)
+            # snapshot isolation: the pinned epoch ignores unsealed events
+            before = sched.run([case.qry])[0]
+            mgr.advance(sched)
+            after = sched.run([case.qry])[0]
+            ref_graph = ingest.materialize(mgr.log, k + 1)
+            ref = BatchScheduler(ref_graph, engine=engine, mode=mode,
+                                 n_buckets=n_buckets,
+                                 n_workers=max(n_workers, 1)).run(
+                                     [case.qry])[0]
+            frozen = BatchScheduler(ep.graph, engine=engine, mode=mode,
+                                    n_buckets=n_buckets,
+                                    n_workers=max(n_workers, 1)).run(
+                                        [case.qry])[0]
+            for field in ("total", "per_vertex", "minmax"):
+                want, got = getattr(ref, field), getattr(after, field)
+                if want is None and got is None:
+                    continue
+                assert np.array_equal(_np(want), _np(got)), (ctx, k, field)
+                pre, froz = getattr(before, field), getattr(frozen, field)
+                assert np.array_equal(_np(pre), _np(froz)), \
+                    (ctx, k, field, "snapshot isolation")
+            ep = mgr.current

@@ -1,0 +1,353 @@
+"""Streaming ingestion + epoch-pinned serving (graphdata/ingest.py,
+serving/epochs.py).
+
+Pinned invariants:
+
+  * the event log validates referential integrity incrementally (duplicate
+    keys, dangling endpoints, lifespan containment, closes that would
+    truncate live incident edges);
+  * incremental materialization is bit-identical to a from-scratch build of
+    every epoch — graphs, traversal tables and fingerprints — across edge
+    appends, vertex adds, property sets and interval closes;
+  * replay is order-insensitive within an epoch: any permutation of an
+    epoch's events yields the same materialized layout fingerprint AND the
+    same chained epoch fingerprint (seeded always; hypothesis when
+    installed);
+  * the conformance matrix's ingestion leg: epoch-pinned serving on all
+    three engines stays bit-identical to from-scratch builds while
+    ingestion advances between batches, and pinned epochs never observe
+    unsealed events (snapshot isolation);
+  * delta execution (base graph + padded delta block) is bit-identical to
+    the merged epoch graph across modes and aggregates;
+  * the scheduler's delta-aware cache behavior: pure edge-append epochs
+    re-use plans and the delta executable (cache HITS, zero invalidation),
+    compaction evicts exactly the retired fingerprints, and per-partition
+    fingerprints evolve only for touched vertex types.
+"""
+import numpy as np
+import pytest
+
+from repro.core import engine as E
+from repro.core import query as Q
+from repro.graphdata import ingest
+from repro.graphdata.ingest import (EventLog, add_edge, add_vertex,
+                                    close_edge, close_vertex,
+                                    events_fingerprint, log_from_graph,
+                                    materialize, set_vprop)
+from repro.graphdata.queries import make_workload
+from repro.obs.metrics import MetricsRegistry
+from repro.serving import BatchScheduler, EpochManager
+from repro.serving.cache import graph_fingerprint
+
+from conformance import (ALL_MODES, case_matrix, check_ingestion_case,
+                         perturbed_batch)
+
+pytestmark = pytest.mark.ingest
+
+
+# =========================================================================
+# event-log validation
+# =========================================================================
+def test_event_log_validation():
+    log = EventLog(2, 1, (0, 100))
+    log.append(add_vertex(0, 0, (0, 50)))
+    log.append(add_vertex(1, 1, (10, 100)))
+    with pytest.raises(ValueError, match="duplicate vertex"):
+        log.append(add_vertex(0, 0, (0, 50)))
+    with pytest.raises(ValueError, match="type .* out of range"):
+        log.append(add_vertex(2, 5, (0, 50)))
+    with pytest.raises(ValueError, match="empty vertex lifespan"):
+        log.append(add_vertex(2, 0, (30, 30)))
+    with pytest.raises(ValueError, match="unknown vertex"):
+        log.append(add_edge(0, 0, 9, 0, (10, 40)))
+    with pytest.raises(ValueError, match="outside vertex"):
+        log.append(add_edge(0, 0, 1, 0, (5, 40)))   # starts before v1
+    log.append(add_edge(0, 0, 1, 0, (10, 40)))
+    with pytest.raises(ValueError, match="duplicate edge"):
+        log.append(add_edge(0, 1, 0, 0, (10, 40)))
+    with pytest.raises(ValueError, match="truncates a live incident edge"):
+        log.append(close_vertex(0, 20))
+    log.append(close_edge(0, 30))
+    # the incident-edge bound is conservative: it tracks the max lifespan
+    # any incident edge was ADDED with, so the vertex close must clear 40
+    log.append(close_vertex(0, 40))
+    with pytest.raises(ValueError, match="unknown entity"):
+        log.append(set_vprop(7, 0, 1, (0, 10)))
+    assert log.n_open == len(log)
+    log.seal()
+    assert log.n_open == 0 and log.n_epochs == 1
+    g = materialize(log)
+    assert g.n_vertices == 2 and g.n_edges == 1
+    assert tuple(g.e_life[0]) == (10, 30)
+    assert tuple(g.v_life[0]) == (0, 40)
+
+
+def test_epoch0_rebuilds_source_graph(small_dynamic_graph):
+    g = small_dynamic_graph
+    log, held = log_from_graph(g)
+    assert held == []
+    g0 = materialize(log)
+    assert np.array_equal(g0.v_type, g.v_type)
+    assert np.array_equal(g0.v_life, g.v_life)
+    assert g0.n_edges == g.n_edges
+    # edges re-sort into canonical key order; compare as row sets
+    rows = lambda gg: {tuple(r) for r in np.stack(
+        [gg.e_src, gg.e_dst, gg.e_type, gg.e_life[:, 0], gg.e_life[:, 1]],
+        axis=1)}
+    assert rows(g0) == rows(g)
+    # property columns may re-pivot slot order; compare populated row sets
+    for pk, col in g.vprops.items():
+        want = {(int(e), int(col.vals[e, s]), *map(int, col.life[e, s]))
+                for e, s in zip(*np.nonzero(col.vals != ingest.NO_VALUE))}
+        c0 = g0.vprops[pk]
+        got = {(int(e), int(c0.vals[e, s]), *map(int, c0.life[e, s]))
+               for e, s in zip(*np.nonzero(c0.vals != ingest.NO_VALUE))}
+        assert got == want, pk
+
+
+# =========================================================================
+# incremental == from-scratch, across epoch varieties
+# =========================================================================
+def _mixed_epochs(g, log, held):
+    """Three epochs: pure edge appends; vertex adds + props + an edge to a
+    new vertex; closes on both base and appended entities."""
+    V, EE = g.n_vertices, g.n_edges
+    person = g.meta["builder"].v_type_ids["person"]
+    lo, hi = g.lifespan
+    yield held[: len(held) // 2]
+    nv = [add_vertex(V, person, (lo, hi)), add_vertex(V + 1, person, (lo, hi))]
+    pk = sorted(g.vprops)[0]
+    yield nv + [set_vprop(V, pk, 7, (lo, hi)),
+                add_edge(EE, V, V + 1, 0, (lo + 1, hi)),
+                *held[len(held) // 2:]]
+    # close just after the edge's start — always valid, truncates its life
+    yield [close_edge(held[0].key, int(held[0].data[3]) + 1)]
+
+
+def test_incremental_matches_materialize(small_dynamic_graph):
+    g = small_dynamic_graph
+    log, held = log_from_graph(g, holdout_edges=12, seed=3)
+    mat = ingest.Materializer(log)
+    mat.apply_next()
+    for k, events in enumerate(_mixed_epochs(g, log, held), start=2):
+        log.extend(events)
+        log.seal()
+        inc = mat.apply_next()
+        ref = materialize(log, k)
+        assert graph_fingerprint(inc) == graph_fingerprint(ref), k
+        for f in ("t_src", "t_dst", "t_life", "t_type", "t_isfwd", "t_eid",
+                  "arr_ptr"):
+            assert np.array_equal(inc.traversal[f], ref.traversal[f]), (k, f)
+    # the close on an appended edge keeps the window delta-pure; the
+    # vertex/prop epoch broke it earlier
+    assert not mat.delta_pure
+
+
+def test_delta_purity_tracking(small_dynamic_graph):
+    log, held = log_from_graph(small_dynamic_graph, holdout_edges=8, seed=1)
+    mat = ingest.Materializer(log)
+    mat.apply_next()
+    log.extend(held[:4])
+    log.seal()
+    mat.apply_next()
+    assert mat.delta_pure and mat.delta_spec() is not None
+    # close on an APPENDED edge keeps purity; close on a BASE edge breaks it
+    log.append(close_edge(held[0].key, int(held[0].data[3]) + 1))
+    log.seal()
+    mat.apply_next()
+    assert mat.delta_pure
+    base_key = next(k for k in range(small_dynamic_graph.n_edges)
+                    if k not in {h.key for h in held})
+    log.append(close_edge(base_key, int(log._e[base_key][2]) + 1))
+    log.seal()
+    mat.apply_next()
+    assert not mat.delta_pure and mat.delta_spec() is None
+    mat.compact()
+    assert mat.delta_pure
+
+
+# =========================================================================
+# replay order-insensitivity (the satellite property test)
+# =========================================================================
+def _permuted_fingerprints(graph, perm_seed: int):
+    log, held = log_from_graph(graph, holdout_edges=10, seed=2)
+    base_events = log.epoch_events(0)
+    rng = np.random.default_rng(perm_seed)
+    log2 = EventLog(graph.n_vertex_types, graph.n_edge_types, graph.lifespan,
+                    meta=dict(graph.meta), validate=False)
+    log2.extend([base_events[i] for i in rng.permutation(len(base_events))])
+    log2.seal()
+    for lg, evs in ((log, held), (log2,
+                                  [held[i]
+                                   for i in rng.permutation(len(held))])):
+        lg.extend(evs)
+        lg.seal()
+    fp1 = graph_fingerprint(materialize(log, 2))
+    fp2 = graph_fingerprint(materialize(log2, 2))
+    e1 = events_fingerprint("seed", log.epoch_events(1))
+    e2 = events_fingerprint("seed", log2.epoch_events(1))
+    return fp1, fp2, e1, e2
+
+
+def test_replay_order_insensitive_seeded(small_dynamic_graph):
+    for seed in (0, 1, 2, 3):
+        fp1, fp2, e1, e2 = _permuted_fingerprints(small_dynamic_graph, seed)
+        assert fp1 == fp2, seed
+        assert e1 == e2, seed
+
+
+def test_replay_order_insensitive_hypothesis(small_dynamic_graph):
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property tests need the optional hypothesis "
+        "dep (pip install hypothesis)")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def prop(seed):
+        fp1, fp2, e1, e2 = _permuted_fingerprints(small_dynamic_graph, seed)
+        assert fp1 == fp2 and e1 == e2
+
+    prop()
+
+
+# =========================================================================
+# conformance ingestion leg: all three engines, serving during ingestion
+# =========================================================================
+@pytest.mark.conformance
+@pytest.mark.parametrize("case_name", ["plain-2hop", "plain-bidir",
+                                       "agg-min-2hop"])
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_conformance_ingestion_leg(small_dynamic_graph, case_name, mode):
+    case = case_matrix(small_dynamic_graph)[case_name]
+    check_ingestion_case(small_dynamic_graph, case, mode)
+
+
+# =========================================================================
+# delta execution == merged execution
+# =========================================================================
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_delta_executable_matches_merged(small_dynamic_graph, mode):
+    g = small_dynamic_graph
+    log, held = log_from_graph(g, holdout_edges=20, seed=4)
+    mat = ingest.Materializer(log)
+    base = mat.apply_next()
+    log.extend(held)
+    log.seal()
+    merged = mat.apply_next()
+    spec = mat.delta_spec()
+    assert spec is not None and spec.n_edges == len(held)
+    cases = case_matrix(g)
+    for name in ("plain-2hop", "plain-bidir", "agg-count", "agg-min-2hop"):
+        qry = cases[name].qry
+        batch = perturbed_batch(qry, 3)
+        split = 0 if qry.agg_op != Q.AGG_NONE else qry.n_vertices - 1
+        run = E.batch_executable_delta(base, qry, split=split, mode=mode)
+        params = np.stack([Q.query_params(q) for q in batch])
+        got = run(params, spec.device())
+        want = E.execute_batch_out(merged, batch, split=split, mode=mode,
+                                   sliced=False)
+        for field in ("total", "per_vertex", "minmax"):
+            w, o = getattr(want, field), getattr(got, field)
+            if w is None and o is None:
+                continue
+            assert np.array_equal(np.asarray(w), np.asarray(o)), (name, field)
+
+
+def test_delta_executable_rejects_etr(small_dynamic_graph):
+    case = next(c for n, c in case_matrix(small_dynamic_graph).items()
+                if n.startswith("etr-"))
+    with pytest.raises(ValueError, match="ETR"):
+        E.batch_executable_delta(small_dynamic_graph, case.qry)
+
+
+# =========================================================================
+# scheduler: epoch pinning, delta dispatch, cache metrics
+# =========================================================================
+def test_scheduler_epoch_pinning_and_cache_metrics(small_dynamic_graph):
+    g = small_dynamic_graph
+    log, held = log_from_graph(g, holdout_edges=30, seed=7)
+    mx = MetricsRegistry()
+    mgr = EpochManager(log, compact_every=10, metrics=mx)
+    e0 = mgr.seal()
+    wl = [i.qry for i in make_workload(e0.graph, n_per_template=1, seed=11)]
+    sched = BatchScheduler(e0.graph, metrics=mx)
+    mgr.attach(sched)
+    assert sched.pinned_epoch is e0 and e0.compacted
+
+    cache = mx.counter("granite_cache_total", "serving cache events",
+                       labelnames=("cache", "event"))
+    counts = lambda ev: cache.value(cache="executable", event=ev)
+
+    sched.run(wl)
+    miss0 = counts("miss")
+    assert miss0 > 0 and counts("invalidation") == 0
+
+    # epoch 1: pure edge appends — delta dispatch, no invalidation
+    mgr.ingest(held[:15])
+    ep1 = mgr.advance(sched)
+    assert not ep1.compacted and ep1.delta is not None
+    sched.run(wl)
+    nd1 = sum(1 for d in sched.last_dispatches if d.delta)
+    assert nd1 > 0
+    assert counts("invalidation") == 0
+
+    # epoch 2: same shape groups — the delta executable must now HIT
+    hits1 = counts("hit")
+    mgr.ingest(held[15:])
+    ep2 = mgr.advance(sched)
+    assert not ep2.compacted
+    sched.run(wl)
+    assert sum(1 for d in sched.last_dispatches if d.delta) == nd1
+    assert counts("hit") > hits1
+
+    # part fingerprints evolve only for touched types
+    touched = {t for ev in log.epoch_events(2)
+               for t in (int(g.v_type[ev.data[0]]), int(g.v_type[ev.data[1]]))}
+    for t, fp in ep2.part_fingerprints.items():
+        if t in touched:
+            assert fp != ep1.part_fingerprints[t], t
+        else:
+            assert fp == ep1.part_fingerprints[t], t
+
+    # snapshot isolation: unsealed events don't perturb pinned results
+    before = sched.run(wl)
+    mgr.ingest([add_vertex(g.n_vertices, 0, g.lifespan)])
+    after = sched.run(wl)
+    for a, b in zip(before, after):
+        assert np.array_equal(np.asarray(a.total), np.asarray(b.total))
+
+    # compaction: retired fingerprints evicted and counted
+    ep3 = mgr.advance(sched, compact=True)
+    assert ep3.compacted and counts("invalidation") > 0
+    assert ep3.base_fingerprint != ep1.base_fingerprint
+    sched.run(wl)
+    ref = BatchScheduler(materialize(log, log.n_epochs)).run(wl)
+    got = sched.run(wl)
+    for a, b in zip(got, ref):
+        assert np.array_equal(np.asarray(a.total), np.asarray(b.total))
+        assert np.array_equal(np.asarray(a.per_vertex),
+                              np.asarray(b.per_vertex))
+
+
+# =========================================================================
+# partition extension
+# =========================================================================
+def test_partition_extension_consistent(small_dynamic_graph):
+    from repro.core import engine_partitioned as EP
+
+    g = small_dynamic_graph
+    log, held = log_from_graph(g, holdout_edges=10, seed=9)
+    mgr = EpochManager(log)
+    e0 = mgr.seal()
+    # warm the base partitioning cache, as the serving path would
+    base_part, _, _ = EP.partition_for(e0.graph, 2)
+    mgr.ingest(held)
+    ep = mgr.seal()
+    assert getattr(ep.graph, "_partition_hint", None) is not None
+    part, _, _ = EP.partition_for(ep.graph, 2)
+    # extension: every base vertex keeps its part assignment
+    remap = mgr.mat._remap_from_base
+    assert np.array_equal(part.part_of[remap], base_part.part_of)
+    assert part.n_parts == base_part.n_parts
