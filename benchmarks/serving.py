@@ -51,6 +51,19 @@ Three measurements, one JSON artifact (``BENCH_serving.json``):
                epoch vs a from-scratch build.  BENCH_ENFORCE requires the
                ratio <= 3x and a non-zero delta dispatch count; check_bench
                pins the structural counters.
+  chaos        fault-tolerant serving under a seeded FaultPlan: the workload
+               drains three times on the partitioned engine with 10%
+               transient dispatch faults, one injected worker loss (dense
+               fallback → down window → probe restore), and one poison
+               query — completion must be 100% (answer or structured
+               quarantine, never an unhandled exception) and every answered
+               query bit-identical to the fault-free reference; plus a
+               crash/recover sub-leg (WAL write torn mid-line, recovery
+               replays to the exact pre-crash epoch fingerprint).
+               BENCH_ENFORCE requires completion_rate == 1.0,
+               answers_identical, recovery_identical, and non-zero
+               retry/quarantine counts; check_bench pins the counters and a
+               goodput floor vs fault-free.
   hop_delivery xla-vs-pallas hop timings: ONE traversal-hop delivery
                (gather → mask → segment-reduce) timed as the
                materialize+segment_sum path and as the fused hop_scatter
@@ -516,6 +529,119 @@ def ingest_leg(g) -> dict:
     )
 
 
+def chaos_leg(g, wl, n_workers: int = 4,
+              wal_path: str = "BENCH_chaos_wal.jsonl") -> dict:
+    """Fault-tolerant serving under a seeded FaultPlan (the paper's
+    completion claim as a measured property).
+
+    The workload drains three times on the partitioned engine against a
+    fault-free reference:
+
+      flush 1   10% seeded transient dispatch faults + the FIRST partitioned
+                dispatch loses a worker → the whole flush re-plans dense;
+      flush 2   the partitioned path is still inside its down window
+                (``probe_after``) → dense again, no worker consultations;
+      flush 3   the probe dispatch fires, succeeds, and restores the
+                partitioned path.
+
+    One query is poisoned (fails deterministically): bisection isolates it
+    and quarantines exactly that query each flush, everything else answers.
+    Reported/enforced: completion rate (answer-or-structured-reject — must
+    be 1.0), bit-identity of every answered query vs the reference,
+    retry/quarantine/fallback counts, and goodput vs fault-free (retry
+    backoff is ACCOUNTED into the drain, so the ratio prices the faults).
+
+    The crash/recover sub-leg tears a WAL append mid-line (simulated crash
+    mid-ingest) and requires ``EpochManager.recover`` to restore the exact
+    pre-crash pinned-epoch fingerprint."""
+    from repro.graphdata import ingest
+    from repro.serving import (EpochManager, FaultPlan, RetryPolicy,
+                               TornWriteError)
+
+    ref = BatchScheduler(g, engine="partitioned", n_workers=n_workers,
+                         use_planner=True, budget_s=BUDGET_S)
+    ref.run(wl, warm=True)
+    ref_res = ref.run(wl, warm=True)            # warm reference drain
+    ref_drain = sum(d.service_s for d in ref.last_dispatches)
+    assert all(r.ok for r in ref_res)
+
+    poison = wl[len(wl) // 2].qry
+    plan = FaultPlan(seed=SEED, rates={"dispatch": 0.10},
+                     schedule={"worker": {0}},
+                     poison=lambda q: q is poison)
+    sched = BatchScheduler(g, engine="partitioned", n_workers=n_workers,
+                           use_planner=True, budget_s=BUDGET_S,
+                           plan_cache=ref.plan_cache,
+                           exec_cache=ref.exec_cache,
+                           fault_plan=plan, retry=RetryPolicy(seed=SEED))
+    flushes, drains, engines = [], [], []
+    for _ in range(3):
+        res = sched.run(wl, warm=True)
+        flushes.append(res)
+        drains.append(sum(d.service_s for d in sched.last_dispatches))
+        engines.append(sorted({r.engine for r in res if r.status == "done"}))
+    n_total = 3 * len(wl)
+    n_done = n_quar = 0
+    identical = True
+    for res in flushes:
+        for r, rr in zip(res, ref_res):
+            if r.status == "done":
+                n_done += 1
+                identical = identical and r.count == rr.count
+            elif r.status == "quarantined":
+                n_quar += 1
+    completion_rate = (n_done + n_quar) / n_total
+    rep = sched.fault_report()
+    # goodput prices the chaos: answered queries per accounted second vs the
+    # fault-free drain (backoff penalties and retried dispatches inflate
+    # the denominator)
+    goodput_ratio = ((n_done / max(sum(drains), 1e-12))
+                     / (len(wl) / max(ref_drain, 1e-12)))
+
+    # ---- crash/recover: tear a WAL append mid-line, then recover
+    log, held = ingest.log_from_graph(g, holdout_edges=30, seed=SEED)
+    log.attach_wal(wal_path,
+                   fault_plan=FaultPlan(seed=SEED, schedule={"wal": {15}}))
+    mgr = EpochManager(log)
+    mgr.seal()                                  # epoch 0 (no WAL consults)
+    mgr.ingest(held[:10])
+    mgr.seal()                                  # epoch 1
+    pre_fp = mgr.current.fingerprint
+    torn = False
+    try:
+        mgr.ingest(held[10:])                   # k=15 tears mid-batch
+    except TornWriteError:
+        torn = True
+    del mgr                                     # the crash
+    mgr2 = EpochManager.recover(wal_path)
+    recovery_identical = torn and mgr2.current.fingerprint == pre_fp
+    assert recovery_identical, "WAL recovery diverged from pre-crash state"
+    mgr2.log.close_wal()
+
+    return dict(
+        n_queries=len(wl),
+        n_flushes=3,
+        n_done=n_done,
+        completion_rate=completion_rate,
+        answers_identical=bool(identical),
+        n_retries=rep["n_retries"],
+        n_quarantined=rep["n_quarantined"],
+        n_timeout=rep["n_timeout"],
+        n_fallbacks=rep["n_fallbacks"],
+        partitioned_restored=bool(rep["partitioned_available"]),
+        engines_per_flush=engines,
+        fault_plan=rep["fault_plan"],
+        ref_drain_s=ref_drain,
+        chaos_drain_s=float(sum(drains)),
+        goodput_ratio=float(goodput_ratio),
+        recovery=dict(
+            recovery_identical=bool(recovery_identical),
+            n_recovered_epochs=mgr2.log.n_epochs,
+            n_open_survivors=mgr2.log.n_open,
+        ),
+    )
+
+
 def run(out_path: str = "BENCH_serving.json") -> dict:
     # the hop micro runs FIRST: it times a single kernel-vs-scatter step, so
     # it must not inherit the heap/caches the workload legs accumulate
@@ -564,6 +690,9 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
     # ---- live-graph serving: epoch-pinned drains while ingesting
     ing = ingest_leg(g)
 
+    # ---- fault-tolerant serving under a seeded FaultPlan + crash recovery
+    chaos = chaos_leg(g, wl)
+
     report = dict(
         graph=graph_name(params),
         scale=SCALE,
@@ -595,6 +724,7 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
         dynamic_leg=dynamic_leg(),
         hop_delivery=hop,
         ingest=ing,
+        chaos=chaos,
     )
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -626,6 +756,13 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
          f"delta_dispatches={ing['delta_exec_dispatches']};"
          f"epochs={ing['n_epochs']};"
          f"invalidations={ing['exec_invalidations']:.0f}")
+    emit("serving/chaos_drain_us_per_query",
+         chaos["chaos_drain_s"] / (3 * chaos["n_queries"]) * 1e6,
+         f"completion={chaos['completion_rate']:.3f};"
+         f"goodput={chaos['goodput_ratio']:.2f}x;"
+         f"retries={chaos['n_retries']};"
+         f"quarantined={chaos['n_quarantined']};"
+         f"recovered={chaos['recovery']['n_recovered_epochs']}ep")
     print(f"# batched drain throughput {bat_tput:.1f} qps vs sequential "
           f"{seq_tput:.1f} qps → {ratio:.2f}x", flush=True)
     print(f"# fused hop kernel: static {hop['static']['speedup']:.2f}x, "
@@ -682,6 +819,33 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
         if not ing["delta_exec_dispatches"] > 0:
             print("# FAIL: no group was served by the delta executable",
                   flush=True)
+            sys.exit(1)
+        # chaos acceptance: the completion claim is EXACT — every query
+        # under the seeded FaultPlan answers or is structurally rejected,
+        # answered queries are bit-identical to fault-free, and crash
+        # recovery restores the exact pre-crash epoch fingerprint
+        if chaos["completion_rate"] != 1.0:
+            print(f"# FAIL: chaos completion rate "
+                  f"{chaos['completion_rate']:.4f} != 1.0", flush=True)
+            sys.exit(1)
+        if not chaos["answers_identical"]:
+            print("# FAIL: a fault-injected answer diverged from the "
+                  "fault-free reference", flush=True)
+            sys.exit(1)
+        if not chaos["recovery"]["recovery_identical"]:
+            print("# FAIL: WAL crash recovery diverged from the pre-crash "
+                  "epoch fingerprint", flush=True)
+            sys.exit(1)
+        if not (chaos["n_retries"] > 0 and chaos["n_quarantined"] > 0
+                and chaos["n_fallbacks"] > 0):
+            print(f"# FAIL: chaos exercised nothing "
+                  f"(retries={chaos['n_retries']}, "
+                  f"quarantined={chaos['n_quarantined']}, "
+                  f"fallbacks={chaos['n_fallbacks']})", flush=True)
+            sys.exit(1)
+        if not chaos["partitioned_restored"]:
+            print("# FAIL: partitioned path never restored after the probe "
+                  "window", flush=True)
             sys.exit(1)
     return report
 

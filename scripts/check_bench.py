@@ -94,6 +94,23 @@ CHECKS = [
     ("BENCH_serving.json", "ingest.n_compactions", "exact", 0),
     ("BENCH_serving.json", "ingest.delta_exec_dispatches", "exact", 0),
     ("BENCH_serving.json", "ingest.completion_rate", "min_frac", 0.95),
+    # ---- fault tolerance: the chaos leg's completion contract is EXACT
+    # (benchmarks/serving.py asserts it via BENCH_ENFORCE too — the gate
+    # here keeps the counters from drifting: same seeded FaultPlan → same
+    # consultations → same retry/quarantine/fallback counts).  Goodput vs
+    # fault-free is a ratio band; recovery identity and the recovered WAL
+    # shape are structural.
+    ("BENCH_serving.json", "chaos.completion_rate", "min_frac", 1.0),
+    ("BENCH_serving.json", "chaos.answers_identical", "exact", 0),
+    ("BENCH_serving.json", "chaos.n_retries", "exact", 0),
+    ("BENCH_serving.json", "chaos.n_quarantined", "exact", 0),
+    ("BENCH_serving.json", "chaos.n_fallbacks", "exact", 0),
+    ("BENCH_serving.json", "chaos.n_timeout", "exact", 0),
+    ("BENCH_serving.json", "chaos.partitioned_restored", "exact", 0),
+    ("BENCH_serving.json", "chaos.goodput_ratio", "min_frac", 0.50),
+    ("BENCH_serving.json", "chaos.recovery.recovery_identical", "exact", 0),
+    ("BENCH_serving.json", "chaos.recovery.n_recovered_epochs", "exact", 0),
+    ("BENCH_serving.json", "chaos.recovery.n_open_survivors", "exact", 0),
     # ---- fused hop kernel vs materialize+segment_sum: the per-impl hop
     # timings.  Structural edge counts exact (same seed → same graph); the
     # speedup ratios in a band (benchmarks/serving.py separately enforces

@@ -19,6 +19,10 @@
 #                incremental-vs-from-scratch materialization identity,
 #                replay order-insensitivity, delta execution, epoch-pinned
 #                cache metrics, and the conformance ingestion leg
+#   fault        fault tolerance (`-m fault`): deterministic chaos injection,
+#                retry bit-identity, deadline-aware retry budgets, poison
+#                quarantine bisection, worker-loss dense fallback, and WAL
+#                torn-tail crash recovery
 #   docs         scripts/check_docs.py: every fenced command in README.md +
 #                docs/*.md parses, the cheap ```bash run blocks execute,
 #                and every file:line anchor points at a real line
@@ -51,6 +55,8 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m pytest -m obs -x -q
   echo "== ingest: live-graph serving — event log, epochs, delta exec (-m ingest) =="
   python -m pytest -m ingest -x -q
+  echo "== fault: chaos injection, retry/quarantine, worker loss, WAL recovery (-m fault) =="
+  python -m pytest -m fault -x -q
   echo "== docs: fenced commands + file:line anchors (scripts/check_docs.py) =="
   python scripts/check_docs.py
   echo "== conformance: four-way differential matrix at CI scale (-m conformance) =="

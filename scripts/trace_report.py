@@ -9,7 +9,10 @@ rollup, and optionally the cost-model audit.
 Waterfall: one indented line per span, with its duration bar positioned
 inside the root span's window and its headline attrs.  Rollup: per-template
 counts and predicted-vs-measured dispatch error, admission verdicts, hop
-exchange volumes per channel.  ``--audit`` appends obs/audit.audit_report
+exchange volumes per channel, and — when the run was not clean — a failures
+section (rejected/quarantined/timed-out queries with their structured
+errors, plus injected-fault action counts).  ``--audit`` appends
+obs/audit.audit_report
 (telemetry replay, coefficient drift, plan-accuracy metric).
 """
 from __future__ import annotations
@@ -127,6 +130,41 @@ def rollup(records: list) -> str:
     return "\n".join(lines)
 
 
+def failures(records: list, sample: int = 5) -> str:
+    """Rollup of non-done terminal statuses plus injected-fault actions.
+
+    Queries that were rejected at admission, quarantined as poison, or timed
+    out on their retry budget each leave a root 'query' span with a non-done
+    status and a structured error; fault-injection/retry decisions leave
+    parentless 'fault' spans (point, action).  Empty when the run was clean.
+    """
+    roots = span_trees(records)
+    bad = [r for r in sorted(roots.values(), key=lambda r: r["t_start"])
+           if r["name"] == "query"
+           and r["attrs"].get("status", "done") != "done"]
+    actions = Counter()
+    for rec in records:
+        if rec["name"] == "fault":
+            a = rec["attrs"]
+            actions[(a.get("point", "?"), a.get("action", "?"))] += 1
+    if not bad and not actions:
+        return ""
+    lines = ["== failures =="]
+    by_status = Counter(r["attrs"]["status"] for r in bad)
+    lines.append("terminal: " + ("  ".join(
+        f"{k}={v}" for k, v in sorted(by_status.items())) or "none"))
+    if actions:
+        lines.append("fault actions: " + "  ".join(
+            f"{pt}/{ac}={n}" for (pt, ac), n in sorted(actions.items())))
+    for r in bad[:sample]:
+        a = r["attrs"]
+        lines.append(f"  {a.get('template', '?'):<12s} "
+                     f"{a['status']:<12s} {a.get('error', '')}")
+    if len(bad) > sample:
+        lines.append(f"  ... and {len(bad) - sample} more")
+    return "\n".join(lines)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("trace", help="trace JSONL path")
@@ -150,6 +188,10 @@ def main() -> int:
         print(waterfall(root))
         print()
     print(rollup(records))
+    fail = failures(records)
+    if fail:
+        print()
+        print(fail)
     if args.audit:
         print("\n== cost-model audit ==")
         rep = audit.audit_report(records, within=args.within)

@@ -322,6 +322,22 @@ class Planner:
         deg = graph.in_degree.astype(np.int64) + graph.out_degree.astype(np.int64)
         self.trav_arrivals_by_type = np.zeros(graph.n_vertex_types, np.int64)
         np.add.at(self.trav_arrivals_by_type, graph.v_type, deg)
+        # execution paths the fault layer has marked down (e.g. the
+        # partitioned engine after a worker loss); the scheduler drives
+        # these and consults engine_available before planning onto a path
+        self.unavailable: set = set()
+
+    # ------------------------------------------------- engine availability
+    def mark_unavailable(self, engine: str) -> None:
+        """Mark an execution path down (serving fault layer: a partitioned
+        dispatch lost a worker; units re-plan dense until a probe clears)."""
+        self.unavailable.add(engine)
+
+    def mark_available(self, engine: str) -> None:
+        self.unavailable.discard(engine)
+
+    def engine_available(self, engine: str) -> bool:
+        return engine not in self.unavailable
 
     def enumerate_plans(self, qry: Q.PathQuery) -> List[int]:
         if qry.agg_op != Q.AGG_NONE:

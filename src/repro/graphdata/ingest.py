@@ -50,6 +50,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
+import os
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -107,6 +109,47 @@ def close_edge(key: int, t: int) -> Event:
     return Event(EV_CLOSE_EDGE, int(key), (int(t),))
 
 
+# ------------------------------------------------------------------- WAL
+#: genesis value of the WAL's chained record fingerprint
+WAL_GENESIS = "wal:genesis"
+
+
+def _wal_payload(obj: dict) -> str:
+    """Canonical serialization a record's chain fingerprint is computed
+    over (sorted keys, no whitespace — byte-stable across processes)."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def _json_default(o):
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.bool_):
+        return bool(o)
+    raise TypeError(f"not JSON-serializable: {type(o).__name__}")
+
+
+def _json_safe_meta(meta: dict) -> dict:
+    """The journalable subset of a log's meta: entries that survive a JSON
+    round trip (numpy scalars normalised).  Non-serializable attachments
+    (e.g. the LDBC generator's ``builder`` object, kept for query
+    rewriting) are dropped — nothing fingerprint- or execution-relevant
+    lives there, and a recovered deployment regenerates them from
+    ``meta["params"]``."""
+    out = {}
+    for k, v in meta.items():
+        try:
+            out[k] = json.loads(json.dumps(v, default=_json_default))
+        except TypeError:
+            continue
+    return out
+
+
+def _wal_chain(prev_fp: str, payload: str) -> str:
+    return hashlib.sha1((prev_fp + payload).encode()).hexdigest()[:16]
+
+
 def events_fingerprint(prev_fp: str, events: Sequence[Event]) -> str:
     """Chained, permutation-invariant fingerprint: hash of the previous
     fingerprint plus the epoch's events in canonical sorted order.  Two logs
@@ -134,6 +177,15 @@ class EventLog:
     truncating below a live incident edge (the engine's graph-level
     invariant).  Validation is the only order-sensitive part of ingestion;
     disable it to ingest streams whose within-epoch order is arbitrary.
+
+    Durability (``attach_wal`` / ``from_wal``): an append-only JSONL
+    write-ahead log mirrors every event, seal, and manager note.  Records
+    carry a chained fingerprint (``sha1(prev_fp + canonical payload)``),
+    seal records are flushed + fsync'd (the atomic commit point — an epoch
+    either has its seal on disk or it does not), and recovery truncates the
+    first torn or chain-breaking record and everything after it.  Events
+    after the last intact seal are replayed as the open suffix, exactly the
+    pre-crash unsealed state.
     """
 
     def __init__(self, n_vertex_types: int, n_edge_types: int,
@@ -149,6 +201,11 @@ class EventLog:
         # validation state (only maintained when validate=True)
         self._v: Dict[int, list] = {}   # key -> [vtype, l0, l1, max_inc_end]
         self._e: Dict[int, list] = {}   # key -> [skey, dkey, l0, l1]
+        # write-ahead log (attach_wal / from_wal); clones never share it
+        self._wal = None
+        self._wal_fp = WAL_GENESIS
+        self._wal_path: Optional[str] = None
+        self._wal_plan = None           # FaultPlan consulted at "wal" point
 
     # ------------------------------------------------------------- append
     def _check(self, ev: Event) -> None:
@@ -213,6 +270,9 @@ class EventLog:
         if self.validate:
             self._check(ev)
         self._events.append(ev)
+        if self._wal is not None:
+            self._wal_write(dict(k="ev", kind=int(ev.kind), key=int(ev.key),
+                                 data=[int(x) for x in ev.data]))
 
     def extend(self, events: Iterable[Event]) -> int:
         n = 0
@@ -226,7 +286,14 @@ class EventLog:
         """Freeze the open suffix as the next epoch; returns its events
         (possibly empty — an empty epoch is a valid no-op snapshot)."""
         self._seals.append(len(self._events))
-        return self.epoch_events(len(self._seals) - 1)
+        i = len(self._seals) - 1
+        events = self.epoch_events(i)
+        if self._wal is not None:
+            # the atomic commit point: flushed + fsync'd, so a crash either
+            # leaves the epoch sealed on disk or recovery reopens its events
+            self._wal_write(dict(k="seal", epoch=i, n=len(events)),
+                            sync=True)
+        return events
 
     @property
     def n_epochs(self) -> int:
@@ -255,6 +322,131 @@ class EventLog:
         out._v = {k: list(v) for k, v in self._v.items()}
         out._e = {k: list(v) for k, v in self._e.items()}
         return out
+
+    # ---------------------------------------------------------------- WAL
+    def _wal_write(self, obj: dict, consult: bool = True,
+                   sync: bool = False) -> None:
+        """Append one chained record; the "wal" fault point tears the write
+        (a prefix reaches disk, then the simulated crash) when it fires."""
+        if self._wal is None:
+            return
+        payload = _wal_payload(obj)
+        fp = _wal_chain(self._wal_fp, payload)
+        line = _wal_payload({**obj, "fp": fp}) + "\n"
+        if (consult and self._wal_plan is not None
+                and self._wal_plan.should_fail("wal")):
+            self._wal.write(line[: max(1, len(line) // 2)])
+            self._wal.flush()
+            os.fsync(self._wal.fileno())
+            self._wal.close()
+            self._wal = None
+            from ..serving.faults import TornWriteError
+            raise TornWriteError(f"torn WAL write at {self._wal_path}")
+        self._wal.write(line)
+        self._wal_fp = fp
+        if sync:
+            self._wal.flush()
+            os.fsync(self._wal.fileno())
+
+    def attach_wal(self, path, fault_plan=None) -> None:
+        """Start journaling to ``path`` (truncates any existing file): one
+        header record, the log's existing history (events interleaved with
+        their seal records), then every future ``append``/``seal``/
+        ``wal_note`` live.  ``fault_plan``'s "wal" point is consulted for
+        live writes only — never while dumping history."""
+        self._wal_path = str(path)
+        self._wal = open(path, "w", encoding="utf-8")
+        self._wal_fp = WAL_GENESIS
+        self._wal_plan = None
+        self._wal_write(dict(k="hdr", nvt=self.n_vertex_types,
+                             net=self.n_edge_types,
+                             life=[int(x) for x in self.lifespan],
+                             meta=_json_safe_meta(self.meta),
+                             validate=bool(self.validate)))
+        lo = 0
+        for s, hi in enumerate(self._seals):
+            for ev in self._events[lo:hi]:
+                self._wal_write(dict(k="ev", kind=int(ev.kind),
+                                     key=int(ev.key),
+                                     data=[int(x) for x in ev.data]))
+            self._wal_write(dict(k="seal", epoch=s, n=hi - lo))
+            lo = hi
+        for ev in self._events[lo:]:
+            self._wal_write(dict(k="ev", kind=int(ev.kind), key=int(ev.key),
+                                 data=[int(x) for x in ev.data]))
+        self._wal.flush()
+        os.fsync(self._wal.fileno())
+        self._wal_plan = fault_plan
+
+    def wal_note(self, epoch: int, **fields) -> None:
+        """Durable side-channel record (fsync'd) — the EpochManager journals
+        its per-seal compaction decision here so recovery replays even
+        forced decisions exactly."""
+        self._wal_write(dict(k="note", epoch=int(epoch), **fields),
+                        sync=True)
+
+    def close_wal(self) -> None:
+        if self._wal is not None:
+            self._wal.flush()
+            os.fsync(self._wal.fileno())
+            self._wal.close()
+            self._wal = None
+
+    @classmethod
+    def from_wal(cls, path, fault_plan=None) -> Tuple["EventLog", List[dict]]:
+        """Rebuild a log from its WAL — the crash-recovery path.
+
+        Scans records validating the chained fingerprint; the first torn
+        line (no newline / invalid JSON) or chain break marks the torn
+        tail, which is truncated from the file.  Sealed epochs are restored
+        as sealed; intact events after the last seal become the open
+        suffix, exactly the pre-crash unsealed state.  Returns
+        ``(log, notes)`` with the WAL re-attached in append mode (the
+        surviving chain continues), ``notes`` the intact ``wal_note``
+        records in order."""
+        with open(path, "rb") as f:
+            data = f.read()
+        fp = WAL_GENESIS
+        records: List[dict] = []
+        pos = good = 0
+        while pos < len(data):
+            nl = data.find(b"\n", pos)
+            if nl < 0:
+                break                      # torn: line never finished
+            try:
+                obj = json.loads(data[pos:nl].decode("utf-8"))
+                rec_fp = obj.pop("fp")
+            except Exception:
+                break                      # torn: unparseable record
+            if rec_fp != _wal_chain(fp, _wal_payload(obj)):
+                break                      # chain break: corrupt tail
+            records.append(obj)
+            fp = rec_fp
+            pos = good = nl + 1
+        if good < len(data):
+            with open(path, "r+b") as f:
+                f.truncate(good)
+        if not records or records[0].get("k") != "hdr":
+            raise ValueError(f"WAL {path} has no intact header record")
+        hdr = records[0]
+        log = cls(hdr["nvt"], hdr["net"],
+                  (int(hdr["life"][0]), int(hdr["life"][1])),
+                  meta=hdr["meta"], validate=bool(hdr["validate"]))
+        notes: List[dict] = []
+        for obj in records[1:]:
+            kind = obj["k"]
+            if kind == "ev":
+                log.append(Event(int(obj["kind"]), int(obj["key"]),
+                                 tuple(int(x) for x in obj["data"])))
+            elif kind == "seal":
+                log._seals.append(len(log._events))
+            elif kind == "note":
+                notes.append(obj)
+        log._wal_path = str(path)
+        log._wal = open(path, "a", encoding="utf-8")
+        log._wal_fp = fp
+        log._wal_plan = fault_plan
+        return log, notes
 
 
 # ------------------------------------------------------- canonical tables

@@ -24,6 +24,11 @@ Layout:
                 dense→sliced, bounded dispatch quantum) / reject
   telemetry.py  (predicted, measured) dispatch-cost ring buffer + periodic
                 online θ refit — prediction error shrinks during serving
+  faults.py     deterministic chaos injection (FaultPlan: seeded rates /
+                explicit schedules at named points in the dispatch path and
+                the WAL) + RetryPolicy (backoff retries accounted on the
+                virtual clock, deadline-aware budgets, bisection quarantine,
+                worker-loss degradation) — the completion story
   epochs.py     live-graph serving: EpochManager seals event-log epochs,
                 materializes them incrementally, decides compaction, evicts
                 exactly the cache entries whose fingerprints retired, and
@@ -39,6 +44,9 @@ from .cache import (ExecutableCache, PlanCache, graph_fingerprint,
                     layout_signature)
 from .compile import PlanTensor, bucket_key, compile_plan_tensor
 from .epochs import Epoch, EpochManager
+from .faults import (CompileError, FaultError, FaultPlan, PoisonQueryError,
+                     RetryPolicy, TornWriteError, TransientDispatchError,
+                     WorkerLostError)
 from .replay import ReplayReport, replay_workload
 from .scheduler import BatchScheduler, GroupDispatch, ServedResult
 from .telemetry import TelemetryBuffer
@@ -50,4 +58,6 @@ __all__ = [
     "bucket_key", "compile_plan_tensor", "ReplayReport", "replay_workload",
     "AdmissionController", "AdmissionDecision", "AdmissionPolicy",
     "TelemetryBuffer", "FakeDispatcher", "Epoch", "EpochManager",
+    "FaultPlan", "RetryPolicy", "FaultError", "TransientDispatchError",
+    "CompileError", "WorkerLostError", "TornWriteError", "PoisonQueryError",
 ]

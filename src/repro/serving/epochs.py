@@ -116,6 +116,9 @@ class EpochManager:
             self._mx_cache = metrics.counter(
                 "granite_cache_total", "serving cache events",
                 labelnames=("cache", "event"))
+            self._mx_recovery = metrics.counter(
+                "granite_recovery_epochs",
+                "sealed epochs replayed from a WAL at crash recovery")
 
     # ------------------------------------------------------------- ingest
     def ingest(self, events: Iterable[Event]) -> int:
@@ -161,7 +164,8 @@ class EpochManager:
         # nothing pending, and always read the events of the epoch actually
         # being applied — sealing unconditionally would drift seal() one
         # epoch ahead of apply_next().
-        if self.mat.applied >= self.log.n_epochs:
+        fresh = self.mat.applied >= self.log.n_epochs
+        if fresh:
             self.log.seal()
         sp = self.tracer.start("epoch", id=self.mat.applied)
         events = self.log.epoch_events(self.mat.applied)
@@ -204,6 +208,11 @@ class EpochManager:
                 prev = self._part_fps.get(t, "")
                 self._part_fps[t] = hashlib.sha1(
                     f"{prev}+{fp}".encode()).hexdigest()[:16]
+        if fresh and getattr(self.log, "_wal", None) is not None:
+            # journal the decision (policy or forced) so ``recover`` replays
+            # it exactly — the recovered base fingerprint must match even
+            # when a caller forced compaction off-policy
+            self.log.wal_note(eid, compacted=bool(do_compact))
         delta = None if do_compact else self.mat.delta_spec()
         n_delta = g.n_edges - self.mat.base_n_edges
         hint = self.mat.partition_hint()
@@ -219,6 +228,41 @@ class EpochManager:
             self._mx_epochs.inc()
             self._mx_delta_edges.set(n_delta)
         return ep
+
+    # ------------------------------------------------------------ recovery
+    @classmethod
+    def recover(cls, path, compact_every: int = 8,
+                max_delta_frac: float = 0.5, metrics=None, tracer=None,
+                fault_plan=None) -> "EpochManager":
+        """Rebuild a manager from a WAL after a crash.
+
+        ``EventLog.from_wal`` truncates the torn tail and restores sealed
+        epochs + the open suffix; the manager then replays every sealed
+        epoch through ``seal`` — compaction decisions come from the
+        journaled ``wal_note`` records (policy decisions replay identically
+        anyway given the same ``compact_every``/``max_delta_frac``).
+        Replay is deterministic, so the recovered pinned epoch's
+        fingerprint is bit-identical to the pre-crash one (pinned by
+        tests/test_serving_faults.py and the chaos bench leg).  The WAL is
+        re-attached in append mode: ingestion continues where it left off.
+        """
+        from ..graphdata.ingest import EventLog
+        log, notes = EventLog.from_wal(path, fault_plan=fault_plan)
+        mgr = cls(log, compact_every=compact_every,
+                  max_delta_frac=max_delta_frac, metrics=metrics,
+                  tracer=tracer)
+        decisions = {int(n["epoch"]): bool(n["compacted"])
+                     for n in notes if "compacted" in n}
+        n_sealed = log.n_epochs
+        sp = mgr.tracer.start("recover", path=str(path), n_epochs=n_sealed,
+                              n_open=log.n_open)
+        for i in range(n_sealed):
+            mgr.seal(compact=decisions.get(i))
+        mgr.tracer.end(sp, fingerprint=(mgr.current.fingerprint
+                                        if mgr.current else None))
+        if metrics is not None and n_sealed:
+            mgr._mx_recovery.inc(n_sealed)
+        return mgr
 
     # ------------------------------------------------------------- serving
     def attach(self, scheduler) -> None:

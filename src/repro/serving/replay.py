@@ -31,6 +31,15 @@ A group that fails to dispatch (e.g. a non-sliceable query forced onto the
 sliced engine) marks its queries FAILED: they are excluded from latency
 percentiles and counted against completion — a failed query is not a
 completed query.  An empty workload returns a well-formed all-zero report.
+
+Structured failures: every non-done query carries its scheduler status
+(FAILED / QUARANTINED / TIMEOUT — serving/faults.py) or admission verdict
+(REJECTED, with the controller's reason), and the report's ``failures``
+list gives (index, template, status, error) per query — never only
+aggregate counts, so a silent failure cannot hide inside a rate.  Retry
+backoff accounted by the fault layer rides inside ``GroupDispatch.
+service_s``, so the virtual clock (and with it latency percentiles and
+goodput) includes the waiting a retried query actually experienced.
 """
 from __future__ import annotations
 
@@ -43,8 +52,10 @@ import numpy as np
 from ..graphdata.queries import QueryInstance
 from .scheduler import BatchScheduler
 
-#: per-query terminal states in ``ReplayReport.statuses``
+#: per-query terminal states in ``ReplayReport.statuses`` (the last two
+#: come from the scheduler's fault layer — serving/faults.py)
 DONE, FAILED, REJECTED = "done", "failed", "rejected"
+QUARANTINED, TIMEOUT = "quarantined", "timeout"
 
 
 def poisson_arrivals(n: int, rate_qps: float,
@@ -88,6 +99,8 @@ class ReplayReport:
     n_completed: int = 0
     n_failed: int = 0             # dispatch raised: NOT completed
     n_rejected: int = 0           # admission refused at arrival
+    n_quarantined: int = 0        # poison queries isolated by bisection
+    n_timeout: int = 0            # retry budget exhausted vs EDF deadline
     n_degraded: int = 0
     reject_rate: float = 0.0
     deadline_hit_rate: float = 1.0  # fraction of ALL queries inside their own
@@ -97,7 +110,11 @@ class ReplayReport:
                                     # telemetry counters)
     latencies_ms: Optional[np.ndarray] = None   # per query, arrival order
                                                 # (NaN = not completed)
-    statuses: Optional[List[str]] = None        # DONE/FAILED/REJECTED
+    statuses: Optional[List[str]] = None        # DONE/FAILED/REJECTED/
+                                                # QUARANTINED/TIMEOUT
+    #: one structured record per NON-done query: {index, template, status,
+    #: error} — the per-query story behind the aggregate counts
+    failures: Optional[List[dict]] = None
 
     def as_dict(self, with_latencies: bool = False) -> dict:
         d = {k: v for k, v in dataclasses.asdict(self).items()
@@ -116,6 +133,8 @@ def _finish_report(
     sched: BatchScheduler, t: float, arrivals: np.ndarray,
     rel_deadline: np.ndarray, latencies: np.ndarray, statuses: List[str],
     batch_sizes: List[int], n_dispatches: int, max_outstanding: int,
+    errors: Optional[List[str]] = None,
+    templates: Optional[List[str]] = None,
 ) -> ReplayReport:
     done = np.asarray([s == DONE for s in statuses], bool)
     lat_done = latencies[done]
@@ -124,6 +143,12 @@ def _finish_report(
     hit = done & (lat <= rel_deadline * 1e3)
     wall = float(t)
     n_rejected = sum(s == REJECTED for s in statuses)
+    failures = [
+        dict(index=i, status=statuses[i],
+             template=(templates[i] if templates is not None else ""),
+             error=(errors[i] if errors is not None else ""))
+        for i in range(n) if statuses[i] != DONE
+    ]
     if getattr(sched, "metrics", None) is not None:
         mx = sched.metrics
         slack = mx.histogram("granite_deadline_slack_ms",
@@ -161,6 +186,8 @@ def _finish_report(
         n_completed=int(done.sum()),
         n_failed=sum(s == FAILED for s in statuses),
         n_rejected=n_rejected,
+        n_quarantined=sum(s == QUARANTINED for s in statuses),
+        n_timeout=sum(s == TIMEOUT for s in statuses),
         n_degraded=sched.n_degraded,
         reject_rate=n_rejected / n if n else 0.0,
         deadline_hit_rate=float(hit.sum()) / n if n else 1.0,
@@ -168,16 +195,19 @@ def _finish_report(
         slo=sched.slo_report(),
         latencies_ms=latencies,
         statuses=statuses,
+        failures=failures,
     )
 
 
 def _drain(sched: BatchScheduler, t: float, admitted: List[int],
            latencies: np.ndarray, statuses: List[str],
-           arrivals: np.ndarray, batch_sizes: List[int], warm: bool
-           ) -> Tuple[float, int]:
+           arrivals: np.ndarray, batch_sizes: List[int], warm: bool,
+           errors: Optional[List[str]] = None) -> Tuple[float, int]:
     """One flush: advance the virtual clock over each dispatch's service
-    time (EDF order), record completions; mark failed groups FAILED (they
-    consumed no measured service and must not count as completed)."""
+    time (EDF order — service_s includes any accounted retry backoff),
+    record completions; every non-done query takes its scheduler status
+    (FAILED / QUARANTINED / TIMEOUT) and structured error — such units
+    consumed no measured service and must not count as completed."""
     results = sched.flush(warm=warm)
     assert len(results) == len(admitted)
     n_disp = 0
@@ -190,8 +220,11 @@ def _drain(sched: BatchScheduler, t: float, admitted: List[int],
             latencies[qi] = (t - arrivals[qi]) * 1e3
             statuses[qi] = DONE
     for pos, r in enumerate(results):
-        if r is not None and r.error:
-            statuses[admitted[pos]] = FAILED
+        if r is not None and r.status != DONE:
+            qi = admitted[pos]
+            statuses[qi] = r.status
+            if errors is not None:
+                errors[qi] = r.error
     return t, n_disp
 
 
@@ -233,6 +266,7 @@ def replay_workload(
 
     latencies = np.full(n, np.nan)
     statuses: List[Optional[str]] = [None] * n
+    errors: List[str] = [""] * n
     batch_sizes: List[int] = []
     n_dispatches = 0
     t = 0.0
@@ -251,6 +285,7 @@ def replay_workload(
         dec = sched.submit(workload[j], deadline_s=dl, now=now)
         if dec is not None and not dec.admitted:
             statuses[j] = REJECTED
+            errors[j] = dec.reason
             return False
         return True
 
@@ -268,7 +303,7 @@ def replay_workload(
                 j += 1
             i = j
             t, nd = _drain(sched, t, admitted, latencies, statuses,
-                           arrivals, batch_sizes, warm)
+                           arrivals, batch_sizes, warm, errors)
             n_dispatches += nd
     else:
         # batch-synchronous closed loop: issue up to ``max_outstanding``,
@@ -285,11 +320,13 @@ def replay_workload(
             if not admitted:
                 continue        # a wave of rejects; keep issuing
             t, nd = _drain(sched, t, admitted, latencies, statuses,
-                           arrivals, batch_sizes, warm)
+                           arrivals, batch_sizes, warm, errors)
             n_dispatches += nd
 
     return _finish_report(
         n=n, mode=mode, rate_qps=rate_qps, seed=seed, budget=budget,
         sched=sched, t=t, arrivals=arrivals, rel_deadline=rel_deadline,
         latencies=latencies, statuses=statuses, batch_sizes=batch_sizes,
-        n_dispatches=n_dispatches, max_outstanding=max_outstanding)
+        n_dispatches=n_dispatches, max_outstanding=max_outstanding,
+        errors=errors,
+        templates=[getattr(w, "template", "adhoc") for w in workload])

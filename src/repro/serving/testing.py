@@ -16,6 +16,12 @@ and host-timing noise.  ``FakeDispatcher`` plugs into
 Everything downstream — EDF ordering, chunking, telemetry recording,
 admission backlog, replay accounting — runs EXACTLY the production code
 path; only the JAX call is swapped out.  Zero compilation, virtual time.
+
+Fault injection rides the same funnel: the scheduler consults its
+``FaultPlan`` in ``BatchScheduler._dispatch`` BEFORE delegating here, so
+chaos tests (``tests/test_serving_faults.py``) exercise retry, quarantine,
+and worker-loss fallback against the virtual clock — backoff penalties are
+accounted into service time, never slept.
 """
 from __future__ import annotations
 

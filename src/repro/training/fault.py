@@ -4,89 +4,37 @@ At datacenter scale these mechanisms live in the job launcher; here they are
 implemented as a process-local control plane with the same state machine, so
 the recovery logic (the part that is actually subtle) is tested for real:
 
-* ``HeartbeatMonitor`` — workers report liveness; the monitor declares
-  failure after ``timeout_s`` silence.
+* ``HeartbeatMonitor`` / ``StragglerPolicy`` / ``mitigate_stragglers`` —
+  shared with the serving fault layer; the single implementation lives in
+  ``repro.faults_common`` and is re-exported here for compatibility.
 * ``FaultTolerantRunner`` — drives a step function; on (injected or detected)
   worker failure it (a) reassigns the failed worker's graph partitions
   (query engine path, `partitioner.reassign_on_failure`) or (b) restores the
   latest checkpoint and replays (training path).  Restore may land on a
   different worker count — elastic restart.
-* ``mitigate_stragglers`` — speculative re-execution: per-partition times are
-  monitored; partitions slower than ``k × median`` are duplicated on the
-  fastest idle worker and the first result wins (the paper's Q3/Q4 weak-
-  scaling stragglers motivate this).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import checkpoint as ckpt
+from ..faults_common import (  # noqa: F401  (re-exported compatibility names)
+    HeartbeatMonitor,
+    StragglerPolicy,
+    backoff_delay,
+    mitigate_stragglers,
+)
 
-
-class HeartbeatMonitor:
-    def __init__(self, n_workers: int, timeout_s: float = 5.0):
-        self.timeout = timeout_s
-        self.last_beat: Dict[int, float] = {w: time.time() for w in range(n_workers)}
-        self.dead: set = set()
-
-    def beat(self, worker: int, t: Optional[float] = None):
-        if worker not in self.dead:
-            self.last_beat[worker] = time.time() if t is None else t
-
-    def kill(self, worker: int):
-        self.dead.add(worker)
-
-    def check(self, now: Optional[float] = None) -> List[int]:
-        now = time.time() if now is None else now
-        failed = [
-            w for w, t in self.last_beat.items()
-            if w not in self.dead and now - t > self.timeout
-        ]
-        failed += [w for w in self.dead if now is not None]
-        return sorted(set(failed))
-
-    def alive(self) -> List[int]:
-        now = time.time()
-        return [w for w in self.last_beat
-                if w not in self.dead and now - self.last_beat[w] <= self.timeout]
-
-
-@dataclasses.dataclass
-class StragglerPolicy:
-    slowdown_factor: float = 3.0
-    max_duplicates: int = 2
-
-
-def mitigate_stragglers(
-    part_times_ms: np.ndarray,
-    part_worker: np.ndarray,
-    policy: StragglerPolicy = StragglerPolicy(),
-) -> Dict[int, int]:
-    """Given per-partition times and placements, pick partitions to duplicate.
-
-    Returns {partition_id: backup_worker}.  First-result-wins semantics are
-    applied by the caller (the superstep barrier takes min(primary, backup)).
-    """
-    med = float(np.median(part_times_ms))
-    worker_load = {}
-    for p, w in enumerate(part_worker):
-        worker_load[int(w)] = worker_load.get(int(w), 0.0) + float(part_times_ms[p])
-    slow = np.argsort(-part_times_ms)
-    out: Dict[int, int] = {}
-    for p in slow[: policy.max_duplicates]:
-        if part_times_ms[p] > policy.slowdown_factor * max(med, 1e-9):
-            # least-loaded worker that doesn't already own p
-            cands = sorted(worker_load, key=worker_load.get)
-            for w in cands:
-                if w != int(part_worker[p]):
-                    out[int(p)] = w
-                    worker_load[w] += float(part_times_ms[p])
-                    break
-    return out
+__all__ = [
+    "HeartbeatMonitor",
+    "StragglerPolicy",
+    "backoff_delay",
+    "mitigate_stragglers",
+    "FaultTolerantRunner",
+    "elastic_remesh",
+]
 
 
 class FaultTolerantRunner:

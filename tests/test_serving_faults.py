@@ -1,0 +1,304 @@
+"""Fault-tolerance tests: deterministic chaos injection through the serving
+stack — retry bit-identity, deadline-aware retry budgets, poison-query
+quarantine bisection, worker-loss dense fallback with probe recovery, and
+WAL torn-tail crash recovery — plus the completion property: any seeded
+FaultPlan with rates < 1.0 still answers-or-structured-rejects 100% of the
+workload (never an unhandled exception).
+"""
+import numpy as np
+import pytest
+
+from repro.graphdata.ingest import log_from_graph
+from repro.graphdata.queries import make_workload
+from repro.obs import MetricsRegistry
+from repro.serving import (AdmissionPolicy, BatchScheduler, EpochManager,
+                           FaultPlan, RetryPolicy, TornWriteError)
+from repro.serving.faults import FAULT_POINTS
+from repro.serving.testing import (FakeDispatcher, constant_service_model,
+                                   fake_count)
+
+pytestmark = pytest.mark.fault
+
+TERMINAL = ("done", "failed", "quarantined", "timeout")
+
+
+def _sched(graph, **kw):
+    kw.setdefault("dispatcher",
+                  FakeDispatcher(service_model=constant_service_model(1e-3)))
+    kw.setdefault("retry", RetryPolicy())
+    return BatchScheduler(graph, **kw)
+
+
+# --------------------------------------------------------------- fault plan
+def test_fault_plan_deterministic_and_interleaving_independent():
+    """Decisions are keyed (seed, point, k): the same plan config replays
+    identically, and the per-point streams don't perturb each other."""
+    kw = dict(seed=42, rates={"dispatch": 0.4, "compile": 0.2})
+    a, b = FaultPlan(**kw), FaultPlan(**kw)
+    seq_a = [a.should_fail("dispatch") for _ in range(50)]
+    # interleave a foreign point's consultations in plan b
+    seq_b = []
+    for _ in range(50):
+        b.should_fail("compile")
+        seq_b.append(b.should_fail("dispatch"))
+    assert seq_a == seq_b and any(seq_a) and not all(seq_a)
+    assert a.report()["fired"]["dispatch"] == sum(seq_a)
+
+
+def test_fault_plan_schedule_and_validation():
+    plan = FaultPlan(schedule={"wal": {0, 2}})
+    assert [plan.should_fail("wal") for _ in range(4)] == [
+        True, False, True, False]
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultPlan(rates={"disk": 0.5})
+
+
+# ------------------------------------------------------- retry bit-identity
+def test_transient_fault_retried_bit_identical(medium_static_graph):
+    """An injected transient dispatch error is retried with accounted
+    backoff and the answers are bit-identical to a fault-free run."""
+    wl = make_workload(medium_static_graph, templates=("Q2", "Q4"),
+                       n_per_template=3, seed=21)
+    ref = _sched(medium_static_graph, retry=None).run(wl)
+    mx = MetricsRegistry()
+    sched = _sched(medium_static_graph, metrics=mx,
+                   fault_plan=FaultPlan(schedule={"dispatch": {0}}))
+    res = sched.run(wl)
+    assert [r.status for r in res] == ["done"] * len(wl)
+    assert [r.count for r in res] == [r.count for r in ref]
+    assert [r.count for r in res] == [fake_count(i.qry) for i in wl]
+    rep = sched.fault_report()
+    assert rep["n_retries"] == 1 and rep["n_quarantined"] == 0
+    assert mx.counter("granite_retries_total", labelnames=("kind",)).value(
+        kind="dispatch") == 1
+    # the retried group's latency carries the accounted backoff penalty
+    hit = [d for d in sched.last_dispatches if d.n_retries][0]
+    assert hit.penalty_s > 0 and hit.service_s > hit.penalty_s
+
+
+def test_backoff_penalty_accounted_not_slept(medium_static_graph):
+    """Retry backoff inflates the client-visible latency (virtual clock),
+    never the telemetry/θ-refit service time."""
+    import time
+    wl = make_workload(medium_static_graph, templates=("Q2",),
+                       n_per_template=2, seed=22)
+    sched = _sched(medium_static_graph,
+                   retry=RetryPolicy(base_delay_s=30.0, max_delay_s=30.0,
+                                     jitter_frac=0.0),
+                   fault_plan=FaultPlan(schedule={"dispatch": {0}}))
+    t0 = time.perf_counter()
+    res = sched.run(wl)
+    assert time.perf_counter() - t0 < 5.0          # 30 s delay never slept
+    assert all(r.status == "done" for r in res)
+    assert all(r.latency_ms > 1e3 for r in res)    # ...but fully accounted
+
+
+# ------------------------------------------------------ deadline-aware retry
+def test_retry_respects_deadline_budget(medium_static_graph):
+    """A retry whose backoff lands past the group's EDF deadline never
+    fires: with no admission path left, the group times out with a
+    structured error instead of blowing the deadline silently."""
+    wl = make_workload(medium_static_graph, templates=("Q2",),
+                       n_per_template=3, seed=23)
+    sched = _sched(medium_static_graph,
+                   retry=RetryPolicy(base_delay_s=10.0, jitter_frac=0.0,
+                                     max_group_failures=99),
+                   fault_plan=FaultPlan(rates={"dispatch": 1.0}))
+    for inst in wl:
+        sched.submit(inst, deadline_s=1.0, now=0.0)
+    res = sched.flush()
+    assert [r.status for r in res] == ["timeout"] * len(wl)
+    assert all(not r.ok and "deadline" in r.error for r in res)
+    assert sched.fault_report()["n_timeout"] == len(wl)
+
+
+def test_deadline_breach_reenters_admission(medium_static_graph):
+    """When admission is attached, a deadline-breaching retry re-enters
+    admission with the remaining budget and earns one immediate attempt —
+    here the fault was transient, so the group still answers."""
+    wl = make_workload(medium_static_graph, templates=("Q2",),
+                       n_per_template=3, seed=24)
+    sched = _sched(medium_static_graph, admission=AdmissionPolicy(),
+                   retry=RetryPolicy(base_delay_s=10.0, jitter_frac=0.0),
+                   fault_plan=FaultPlan(schedule={"dispatch": {0}}))
+    for inst in wl:
+        assert sched.submit(inst, deadline_s=1.0, now=0.0).admitted
+    res = sched.flush()
+    assert [r.status for r in res] == ["done"] * len(wl)
+    assert [r.count for r in res] == [fake_count(i.qry) for i in wl]
+    assert sched.fault_report()["n_timeout"] == 0
+
+
+# --------------------------------------------------------------- quarantine
+def test_quarantine_bisects_to_exactly_the_poison_query(medium_static_graph):
+    """A deterministically-failing group bisects down to the single poison
+    query, which is rejected with a structured error while every other
+    member of the batch still answers — 100% workload completion."""
+    wl = make_workload(medium_static_graph, templates=("Q2",),
+                       n_per_template=8, seed=25)
+    bad = wl[3].qry
+    mx = MetricsRegistry()
+    sched = _sched(medium_static_graph, metrics=mx,
+                   fault_plan=FaultPlan(poison=lambda q: q is bad))
+    res = sched.run(wl)
+    assert [r.status for r in res] == [
+        "done"] * 3 + ["quarantined"] + ["done"] * 4
+    assert "quarantined" in res[3].error
+    for inst, r in zip(wl, res):
+        if r.status == "done":
+            assert r.count == fake_count(inst.qry)
+    rep = sched.fault_report()
+    assert rep["n_quarantined"] == 1
+    assert mx.counter("granite_quarantined_total").value() == 1
+
+
+# -------------------------------------------------------------- worker loss
+def test_worker_loss_falls_back_dense_then_probes(medium_static_graph):
+    """Losing a partition worker re-plans the unit onto the dense executor
+    (same answers), holds the partitioned path down for ``probe_after``
+    flushes, then probes and restores it."""
+    wl = make_workload(medium_static_graph, templates=("Q2",),
+                       n_per_template=4, seed=26)
+    expect = [fake_count(i.qry) for i in wl]
+    mx = MetricsRegistry()
+    sched = _sched(medium_static_graph, engine="partitioned", metrics=mx,
+                   retry=RetryPolicy(probe_after=2),
+                   fault_plan=FaultPlan(schedule={"worker": {0}}))
+    res1 = sched.run(wl)                      # worker dies mid-dispatch
+    assert [r.engine for r in res1] == ["dense"] * len(wl)
+    assert [r.count for r in res1] == expect
+    assert sched.last_dispatches[0].fallback_from == "partitioned"
+    assert not sched.fault_report()["partitioned_available"]
+
+    res2 = sched.run(wl)                      # down window: no probe yet
+    assert [r.engine for r in res2] == ["dense"] * len(wl)
+    assert not sched.fault_report()["partitioned_available"]
+
+    res3 = sched.run(wl)                      # probe fires and succeeds
+    assert [r.engine for r in res3] == ["partitioned"] * len(wl)
+    assert [r.count for r in res3] == expect
+    assert sched.fault_report()["partitioned_available"]
+    assert mx.counter("granite_degraded_dispatches_total",
+                      labelnames=("reason",)).value(reason="worker-loss") == 1
+    assert mx.counter("granite_degraded_dispatches_total",
+                      labelnames=("reason",)).value(reason="path-down") == 1
+
+
+# ------------------------------------------------------------- WAL recovery
+def _build_epochs(graph, path, holdout=60, fault_plan=None):
+    log, held = log_from_graph(graph, holdout_edges=holdout, seed=7)
+    log.attach_wal(path, fault_plan=fault_plan)
+    mgr = EpochManager(log, compact_every=2)
+    mgr.seal()
+    mgr.ingest(held[:20])
+    mgr.seal()
+    mgr.ingest(held[20:40])
+    mgr.seal()
+    return mgr, held
+
+
+def test_wal_clean_recovery_bit_identical(small_static_graph, tmp_path):
+    """Recovering a cleanly-written WAL replays every sealed epoch to the
+    exact pre-crash pinned fingerprint (compaction decisions journaled)."""
+    wal = str(tmp_path / "clean.wal")
+    mgr, _ = _build_epochs(small_static_graph, wal)
+    pre = mgr.current
+    mgr.log.close_wal()
+    mx = MetricsRegistry()
+    mgr2 = EpochManager.recover(wal, compact_every=2, metrics=mx)
+    assert mgr2.current.fingerprint == pre.fingerprint
+    assert mgr2.current.compacted == pre.compacted
+    assert mgr2.log.n_epochs == 3 and mgr2.log.n_open == 0
+    assert mx.counter("granite_recovery_epochs").value() == 3
+    fp = {t: f for t, f in pre.part_fingerprints.items()}
+    assert mgr2.current.part_fingerprints == fp
+
+
+def test_wal_torn_tail_recovery(small_static_graph, tmp_path):
+    """A write torn mid-line (simulated crash) is truncated at recovery:
+    the log rebuilds to the last intact record, every sealed epoch replays
+    bit-identically, and ingestion continues on the re-attached WAL."""
+    wal = str(tmp_path / "torn.wal")
+    mgr, held = _build_epochs(small_static_graph, wal)
+    pre_fp = mgr.current.fingerprint
+    # re-attach with a plan that tears the 3rd post-attach append mid-line
+    mgr.log.close_wal()
+    mgr.log.attach_wal(wal, fault_plan=FaultPlan(schedule={"wal": {2}}))
+    with pytest.raises(TornWriteError):
+        mgr.ingest(held[40:])
+    del mgr                                    # the crash
+
+    mgr2 = EpochManager.recover(wal, compact_every=2)
+    assert mgr2.current.fingerprint == pre_fp  # sealed state fully intact
+    assert mgr2.log.n_epochs == 3
+    survivors = mgr2.log.n_open                # appends before the tear
+    assert survivors == 2
+    # ingestion continues where it left off: same final graph as a run
+    # that never crashed
+    mgr2.ingest(held[40 + survivors:])
+    ep = mgr2.seal()
+    ref_mgr, _ = _build_epochs(
+        small_static_graph, str(tmp_path / "ref.wal"))
+    ref_mgr.ingest(held[40:])
+    assert ep.fingerprint == ref_mgr.seal().fingerprint
+
+
+# ---------------------------------------------------- completion (property)
+def _completion_case(graph, wl, seed, rates, deadline_s=None):
+    """One seeded chaos run; returns statuses after asserting the
+    completion contract (terminal status for every query, done answers
+    bit-identical to the fault-free reference)."""
+    plan = FaultPlan(seed=seed, rates=rates)
+    sched = _sched(graph, fault_plan=plan)
+    for inst in wl:
+        if deadline_s is None:
+            sched.submit(inst)
+        else:
+            sched.submit(inst, deadline_s=deadline_s, now=0.0)
+    res = sched.flush()
+    assert len(res) == len(wl)
+    for inst, r in zip(wl, res):
+        assert r.status in TERMINAL
+        assert r.status != "failed", r.error   # only STRUCTURED outcomes
+        if r.status == "done":
+            assert r.count == fake_count(inst.qry)
+        else:
+            assert not r.ok and r.error
+    return [r.status for r in res]
+
+
+def test_seeded_chaos_sweep_completes(medium_static_graph):
+    """The completion property, concretely: across seeds and fault rates
+    < 1.0, every query gets an answer or a structured reject — never an
+    unhandled exception, never a silently-dropped query."""
+    wl = make_workload(medium_static_graph, templates=("Q2", "Q4", "Q6"),
+                       n_per_template=3, seed=27)
+    n_done = 0
+    for seed in range(6):
+        statuses = _completion_case(
+            medium_static_graph, wl, seed,
+            rates={"dispatch": 0.3, "compile": 0.15, "straggler": 0.2})
+        n_done += statuses.count("done")
+    assert n_done > 0                          # chaos didn't reject the world
+
+
+def test_property_chaos_completion_hypothesis(medium_static_graph):
+    """Hypothesis-deepened sweep over (seed, rate) when the optional dep is
+    installed (pip install hypothesis); the seeded sweep above runs always."""
+    hyp = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the optional hypothesis dep "
+               "(pip install hypothesis)")
+    st = pytest.importorskip("hypothesis.strategies")
+    wl = make_workload(medium_static_graph, templates=("Q2", "Q4"),
+                       n_per_template=2, seed=28)
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(seed=st.integers(0, 2 ** 16),
+               rate=st.floats(0.0, 0.9),
+               point=st.sampled_from([p for p in FAULT_POINTS
+                                      if p != "wal"]))
+    def prop(seed, rate, point):
+        _completion_case(medium_static_graph, wl, seed, rates={point: rate})
+
+    prop()
